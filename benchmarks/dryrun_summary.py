@@ -1,0 +1,32 @@
+"""Render the §Dry-run summary (compile proof + memory) for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main() -> None:
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 3:
+            continue  # tagged hillclimb runs are listed in §Perf instead
+        d = json.loads(p.read_text())
+        rows.append(d)
+    print(f"{len(rows)} cells compiled\n")
+    print("| arch | shape | mesh | compile (s) | args/dev (GB) | temp/dev (GB) "
+          "| coll/dev (GB, raw scan) | probes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+              f"| {d.get('compile_s', 0):.0f} "
+              f"| {d.get('mem_arg_bytes', 0)/2**30:.2f} "
+              f"| {d.get('mem_temp_bytes', 0)/2**30:.2f} "
+              f"| {sum(json.loads(json.dumps(d.get('coll_breakdown', {}))).values())/2**30:.2f} "
+              f"| {'y' if d.get('probe_info') else '-'} |")
+
+
+if __name__ == "__main__":
+    main()

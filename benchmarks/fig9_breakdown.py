@@ -1,0 +1,66 @@
+"""Paper Fig. 9: execution-time breakdown of sparse CONV layers into their
+component kernels: im2col / GEMM-or-SpMM (lowering path) vs pad_in / sconv
+(Escoin path)."""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import (dense_conv, direct_sparse_conv, ell_matmul, im2col)
+from repro.models import cnn
+from benchmarks.fig8_sparse_conv import SCALES
+
+
+def bench_model(name: str) -> List[str]:
+    image, batch = SCALES[name]
+    net = cnn.NETWORKS[name]()
+    rng = np.random.default_rng(0)
+    params = cnn.init_cnn(net, 3, rng, image)
+    shapes = cnn.conv_layer_shapes(net, 3, image)
+    t_im2col = t_spmm = t_pad = t_sconv = t_gemm = 0.0
+    for layer, (c, h, w) in shapes:
+        if layer.sparsity == 0:
+            continue
+        x = jnp.asarray(rng.standard_normal((batch, c, h, w)).astype(np.float32))
+        entry = params[layer.name]
+        jim2col = jax.jit(functools.partial(
+            im2col, r=layer.k, s=layer.k, stride=layer.stride,
+            padding=layer.pad))
+        cols = jim2col(x)
+        t_im2col += time_fn(jim2col, x, warmup=1, iters=3)
+        # csrmm on the lowered matrix
+        t_spmm += time_fn(jax.jit(ell_matmul), cols, entry["ell2d"],
+                          warmup=1, iters=3)
+        # dense GEMM on the lowered matrix (sgemm)
+        wmat = entry["w"].reshape(entry["w"].shape[0], -1)
+        t_gemm += time_fn(
+            jax.jit(lambda cc, ww: jnp.einsum("npk,mk->nmp", cc, ww)),
+            cols, wmat, warmup=1, iters=3)
+        # escoin: pad_in + sconv
+        pad = layer.pad
+        jpad = jax.jit(lambda xx: jnp.pad(
+            xx, ((0, 0), (0, 0), (pad, pad), (pad, pad))))
+        t_pad += time_fn(jpad, x, warmup=1, iters=3)
+        t_sconv += time_fn(
+            jax.jit(functools.partial(direct_sparse_conv, stride=layer.stride,
+                                      padding=layer.pad)),
+            x, entry["ell"], warmup=1, iters=3)
+    return [
+        row(f"fig9/{name}/im2col", t_im2col, "shared by CUBLAS+CUSPARSE paths"),
+        row(f"fig9/{name}/sgemm", t_gemm, "CUBLAS core"),
+        row(f"fig9/{name}/csrmm", t_spmm, "CUSPARSE core"),
+        row(f"fig9/{name}/pad_in", t_pad, "Escoin pad"),
+        row(f"fig9/{name}/sconv", t_sconv, "Escoin core"),
+    ]
+
+
+def run() -> List[str]:
+    out = []
+    for name in SCALES:
+        out += bench_model(name)
+    return out

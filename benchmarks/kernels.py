@@ -1,0 +1,55 @@
+"""Kernel-level microbenchmarks + Pallas-vs-oracle verification counts.
+
+Interpret-mode Pallas wall time is meaningless (Python execution), so for the
+kernels this reports correctness sweeps + the *structural* performance model:
+per-grid-cell VMEM bytes and FLOPs (what the Mosaic pipeline would stream).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (bcsr_from_dense, block_prune, ell_from_dense_conv,
+                        magnitude_prune)
+from repro.kernels.bsr_matmul.ops import bsr_matmul, choose_tb
+from repro.kernels.bsr_matmul.ref import bsr_matmul_ref
+from repro.kernels.sparse_conv.ops import choose_tm, sparse_conv
+from repro.kernels.sparse_conv.ref import sparse_conv_ref
+
+
+def run() -> List[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    # sparse_conv: AlexNet conv2-like geometry
+    x = jnp.asarray(rng.standard_normal((1, 96, 31, 31)).astype(np.float32))
+    w = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((256, 96, 5, 5)).astype(np.float32)),
+        0.62))
+    ell = ell_from_dense_conv(w)
+    got = sparse_conv(x, ell, padding=0, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(w))
+    err = float(jnp.max(jnp.abs(got - ref.astype(got.dtype))))
+    tm = choose_tm(256, 96, 31, 31, 27, 27, ell.k)
+    vmem = 96 * 31 * 31 * 4 + tm * ell.k * 4 + tm * 27 * 27 * 4
+    out.append(row("kernels/sparse_conv/alexnet_conv2", 0.0,
+                   f"max_err={err:.1e};tm={tm};vmem_bytes={vmem};k={ell.k}"))
+    # bsr_matmul: FFN-like geometry
+    wl = np.asarray(block_prune(
+        jnp.asarray(rng.standard_normal((512, 1024)).astype(np.float32)),
+        0.75, (128, 128)))
+    bc = bcsr_from_dense(wl, (128, 128))
+    xb = jnp.asarray(rng.standard_normal((256, 1024)).astype(np.float32))
+    got = bsr_matmul(xb, bc, interpret=True)
+    ref = bsr_matmul_ref(xb, bc)
+    err = float(jnp.max(jnp.abs(got - ref.astype(got.dtype))))
+    dense_tiles = int(np.asarray(bc.nblocks).sum())
+    total_tiles = (512 // 128) * (1024 // 128)
+    out.append(row(
+        "kernels/bsr_matmul/ffn_512x1024_s0.75", 0.0,
+        f"max_err={err:.1e};mxu_tiles={dense_tiles}/{total_tiles};"
+        f"flop_saving={1 - dense_tiles / total_tiles:.2f};"
+        f"tb={choose_tb(256, 128, 128, 4)}"))
+    return out

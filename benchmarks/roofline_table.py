@@ -1,0 +1,58 @@
+"""Render the §Roofline table for EXPERIMENTS.md from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List, Optional
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(tag: Optional[str] = None) -> List[dict]:
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        parts = p.stem.split("__")
+        rtag = parts[3] if len(parts) > 3 else ""
+        if (tag or "") != rtag:
+            continue
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def markdown_table(rows: List[dict], mesh: str = "16x16") -> str:
+    """Single-pod roofline table.  Cells without probe extrapolation carry a
+    '*' and omit useful/roofline (raw scanned counts count loop bodies once,
+    so those ratios would be meaningless)."""
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bound | useful | roofline | peak mem/dev (GB) |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        probed = bool(r.get("probe_info"))
+        star = "" if probed else "*"
+        useful = f"{r['useful_ratio']:.2f}" if probed else "-"
+        frac = f"{r['roofline_fraction']:.3f}" if probed else "-"
+        lines.append(
+            f"| {r['arch']} | {r['shape']}{star} "
+            f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
+            f"| {r['t_collective']*1e3:.1f} | {r['bottleneck']} "
+            f"| {useful} | {frac} "
+            f"| {(r.get('peak_mem_bytes') or 0)/2**30:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def run() -> List[str]:
+    rows = load()
+    out = []
+    for r in rows:
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['t_compute'], r['t_memory'], r['t_collective'])*1e6:.1f},"
+            f"bound={r['bottleneck']};roofline_frac={r['roofline_fraction']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

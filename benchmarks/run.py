@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig8 fig11 # subset
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig8_sparse_conv, fig9_breakdown, fig10_locality,
+                            fig11_end2end, kernels, roofline_table)
+    suites = {
+        "fig8": fig8_sparse_conv.run,
+        "fig9": fig9_breakdown.run,
+        "fig10": fig10_locality.run,
+        "fig11": fig11_end2end.run,
+        "kernels": kernels.run,
+        "roofline": roofline_table.run,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        for line in suites[key]():
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Escoin quickstart: prune a conv layer, run it four ways, same answer.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (bcsr_from_dense, bcsr_matmul, block_prune, dense_conv,
+                        dense_matmul, direct_sparse_conv, ell_from_dense,
+                        ell_from_dense_conv, lowered_sparse_conv,
+                        magnitude_prune, measured_sparsity)
+from repro.kernels.sparse_conv.ops import sparse_conv
+
+rng = np.random.default_rng(0)
+
+# --- a pruned convolution layer (the paper's setting) ----------------------
+x = jnp.asarray(rng.standard_normal((4, 16, 28, 28)).astype(np.float32))
+w = jnp.asarray(rng.standard_normal((32, 16, 3, 3)).astype(np.float32))
+w = magnitude_prune(w, 0.85)                       # weight pruning
+print(f"conv weight sparsity: {float(measured_sparsity(w)):.2f}")
+
+ell = ell_from_dense_conv(np.asarray(w))           # CSR + weight stretching
+outs = {
+    "dense  (CUBLAS analogue)":   dense_conv(x, w, padding=1),
+    "lowered(CUSPARSE analogue)": lowered_sparse_conv(
+        x, ell_from_dense(np.asarray(w).reshape(32, -1)), 3, 3, padding=1),
+    "escoin direct (pure JAX)":   direct_sparse_conv(x, ell, padding=1),
+    "escoin direct (Pallas)":     sparse_conv(x, ell, padding=1, interpret=True),
+}
+ref = np.asarray(outs["dense  (CUBLAS analogue)"])
+for name, o in outs.items():
+    err = float(np.max(np.abs(np.asarray(o, np.float32) - ref)))
+    print(f"  {name:28s} out={tuple(o.shape)}  max|err|={err:.2e}")
+
+# --- the same technique on a linear layer (BCSR -> MXU path) ----------------
+xl = jnp.asarray(rng.standard_normal((8, 256)).astype(np.float32))
+wl = jnp.asarray(rng.standard_normal((512, 256)).astype(np.float32))
+wl = block_prune(wl, 0.75, (64, 64))               # structured pruning
+bc = bcsr_from_dense(np.asarray(wl), (64, 64))
+y_dense = dense_matmul(xl, wl)
+y_bcsr = bcsr_matmul(xl, bc)
+tiles = int(np.asarray(bc.nblocks).sum())
+print(f"\nlinear: {tiles}/{(512 // 64) * (256 // 64)} MXU tiles survive pruning"
+      f" -> {1 - tiles / 32:.0%} of matmul work skipped,"
+      f" max|err|={float(jnp.max(jnp.abs(y_bcsr - y_dense))):.2e}")
+print("quickstart OK")

@@ -1,0 +1,28 @@
+"""End-to-end serving driver (the paper's kind is inference): batched
+requests against a small LM served dense vs through Escoin BCSR weights.
+
+  PYTHONPATH=src python examples/serve_sparse_llm.py --arch yi-9b --gen 24
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    for sparsity in (0.0, 0.8):
+        print(f"\n=== serving {args.arch} (smoke config), "
+              f"sparsity={sparsity} ===")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+             "--smoke", "--batch", str(args.batch), "--prompt-len", "16",
+             "--gen", str(args.gen), "--sparsity", str(sparsity)],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The *lowering* method (paper Section 2.2) — the baselines Escoin beats.
+
+``im2col`` duplicates each input element up to R*S times into a
+(C*R*S, E*F) matrix so convolution becomes one GEMM.  Two baseline paths:
+
+  lowered_dense_conv -- im2col + dense GEMM on zero-filled weights
+                        (the CUBLAS baseline of Figs. 8/9/11)
+  lowered_sparse_conv-- im2col + CSR(ELL) SpMM on compressed weights
+                        (the CUSPARSE baseline)
+
+Both are faithful to the paper's measurement setup: the *same* pruned weights,
+differing only in storage format and compute routine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sparse_format import EllMatrix
+from repro.core.sparse_linear import ell_matmul
+
+
+def im2col(x: jax.Array, r: int, s: int, *, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """Lower (N, C, H, W) input to the duplicated (N, E*F, C*R*S) matrix.
+
+    Uses XLA's patch extraction; element order along the last axis is
+    (c, r, s) row-major, matching a (M, C*R*S) reshape of OIHW weights.
+    """
+    patches = lax.conv_general_dilated_patches(
+        x, filter_shape=(r, s), window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    n, crs, e, f = patches.shape
+    return patches.reshape(n, crs, e * f).transpose(0, 2, 1)
+
+
+def lowered_dense_conv(x: jax.Array, w_dense: jax.Array, *, stride: int = 1,
+                       padding: int = 0) -> jax.Array:
+    """CUBLAS analogue: im2col + dense GEMM (weights stored dense, zeros kept)."""
+    m, c, r, s = w_dense.shape
+    cols = im2col(x, r, s, stride=stride, padding=padding)   # (N, EF, CRS)
+    wmat = w_dense.reshape(m, c * r * s)
+    out = jnp.einsum("npk,mk->nmp", cols, wmat,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    n = x.shape[0]
+    e = (x.shape[2] + 2 * padding - r) // stride + 1
+    f = (x.shape[3] + 2 * padding - s) // stride + 1
+    return out.reshape(n, m, e, f)
+
+
+def lowered_sparse_conv(x: jax.Array, ell2d: EllMatrix, r: int, s: int, *,
+                        stride: int = 1, padding: int = 0) -> jax.Array:
+    """CUSPARSE analogue: im2col + CSR SpMM.
+
+    ``ell2d`` is the (M, C*R*S) reshape of the pruned filter bank in ELL form
+    (rectangularised CSR).  The duplicated ``cols`` matrix is materialised in
+    full — exactly the bandwidth waste the paper's direct method removes.
+    """
+    m, crs = ell2d.shape
+    cols = im2col(x, r, s, stride=stride, padding=padding)   # (N, EF, CRS)
+    out = ell_matmul(cols, ell2d)                            # (N, EF, M)
+    n = x.shape[0]
+    e = (x.shape[2] + 2 * padding - r) // stride + 1
+    f = (x.shape[3] + 2 * padding - s) // stride + 1
+    return out.transpose(0, 2, 1).reshape(n, m, e, f)

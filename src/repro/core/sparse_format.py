@@ -1,0 +1,294 @@
+"""Compressed sparse formats with the paper's *weight stretching* preprocessing.
+
+Three formats:
+
+``EllConv``   -- the paper's stretched-CSR conv weights, padded per-row to a
+                 rectangular (ELL) layout so shapes are static under jit.  Each
+                 output channel m keeps K = max-row-nnz entries of
+                 (value, c, r, s, stretched offset).  Padding entries carry
+                 value 0 and index 0, so they are mathematically inert.
+
+``EllMatrix`` -- the same idea for 2-D weights (sparse linear layers); each row
+                 keeps K column indices + values.
+
+``BcsrMatrix``-- block compressed sparse row for the MXU path: per block-row,
+                 a padded list of nonzero block-column ids plus the dense tile
+                 data.  Zero-padded tiles point at block-column 0 with all-zero
+                 data (inert).
+
+Conversion happens once at model-load time on the host (numpy), exactly like
+the paper's one-shot CSR construction + weight stretching; the jit-side
+consumers only ever see fixed-shape arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# ELL conv format (paper's stretched CSR, rectangularised)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EllConv:
+    """Sparse conv weights for a (M, C, R, S) filter bank.
+
+    value:  (M, K) float   -- nonzero weights, zero-padded per row
+    cidx:   (M, K) int32   -- input-channel index of each nonzero
+    ridx:   (M, K) int32   -- filter-row index
+    sidx:   (M, K) int32   -- filter-col index
+    offset: (M, K) int32   -- *stretched* flat offset  c*Hp*Wp + r*Wp + s for a
+                              padded input of shape (C, Hp, Wp); recomputed per
+                              layer geometry by ``stretch_offsets``.
+    nnz:    (M,)   int32   -- true row lengths (for diagnostics)
+    shape:  original (M, C, R, S)
+    """
+
+    value: jax.Array
+    cidx: jax.Array
+    ridx: jax.Array
+    sidx: jax.Array
+    offset: jax.Array
+    nnz: jax.Array
+    shape: Tuple[int, int, int, int]
+
+    @property
+    def k(self) -> int:
+        return int(self.value.shape[1])
+
+    def tree_flatten(self):
+        return (self.value, self.cidx, self.ridx, self.sidx, self.offset, self.nnz), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+
+jax.tree_util.register_pytree_node(
+    EllConv, EllConv.tree_flatten, EllConv.tree_unflatten)
+
+
+def ell_from_dense_conv(w, pad_to: int = 8) -> EllConv:
+    """Convert a dense (M, C, R, S) filter bank to ``EllConv``.
+
+    ``pad_to`` rounds K up so jit specialisations are shared across layers with
+    similar density (the paper's 'kernel customization' table keys on this).
+    """
+    w = np.asarray(w)
+    m, c, r, s = w.shape
+    rows_val, rows_c, rows_r, rows_s, nnz = [], [], [], [], []
+    for i in range(m):
+        ci, ri, si = np.nonzero(w[i])
+        rows_val.append(w[i, ci, ri, si])
+        rows_c.append(ci)
+        rows_r.append(ri)
+        rows_s.append(si)
+        nnz.append(len(ci))
+    k = max(1, max(nnz))
+    k = ((k + pad_to - 1) // pad_to) * pad_to
+    val = np.zeros((m, k), dtype=w.dtype)
+    cid = np.zeros((m, k), dtype=np.int32)
+    rid = np.zeros((m, k), dtype=np.int32)
+    sid = np.zeros((m, k), dtype=np.int32)
+    for i in range(m):
+        n = nnz[i]
+        val[i, :n] = rows_val[i]
+        cid[i, :n] = rows_c[i]
+        rid[i, :n] = rows_r[i]
+        sid[i, :n] = rows_s[i]
+    offset = np.zeros((m, k), dtype=np.int32)  # filled by stretch_offsets
+    return EllConv(
+        value=jnp.asarray(val), cidx=jnp.asarray(cid), ridx=jnp.asarray(rid),
+        sidx=jnp.asarray(sid), offset=jnp.asarray(offset),
+        nnz=jnp.asarray(np.asarray(nnz, np.int32)), shape=(m, c, r, s))
+
+
+def stretch_offsets(ell: EllConv, hp: int, wp: int) -> EllConv:
+    """The paper's *weight stretching*: bake the layout function
+    f(c, r, s) = (c*Hp + r)*Wp + s into the column indices, for a padded input
+    of spatial shape (Hp, Wp).  Only ``offset`` changes; run once per geometry.
+    """
+    off = (ell.cidx * hp + ell.ridx) * wp + ell.sidx
+    return dataclasses.replace(ell, offset=off.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# ELL matrix format (sparse linear layers; CSR rectangularised)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EllMatrix:
+    """Sparse (M, N) weight: per row K padded (value, column) pairs."""
+
+    value: jax.Array   # (M, K)
+    colidx: jax.Array  # (M, K) int32
+    nnz: jax.Array     # (M,) int32
+    shape: Tuple[int, int]
+
+    @property
+    def k(self) -> int:
+        return int(self.value.shape[1])
+
+    def tree_flatten(self):
+        return (self.value, self.colidx, self.nnz), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+
+jax.tree_util.register_pytree_node(
+    EllMatrix, EllMatrix.tree_flatten, EllMatrix.tree_unflatten)
+
+
+def ell_from_dense(w, pad_to: int = 8) -> EllMatrix:
+    w = np.asarray(w)
+    if w.ndim != 2:
+        raise ValueError(f"ell_from_dense expects 2-D, got {w.shape}")
+    m, n = w.shape
+    nnz = (w != 0).sum(axis=1)
+    k = max(1, int(nnz.max()))
+    k = ((k + pad_to - 1) // pad_to) * pad_to
+    val = np.zeros((m, k), dtype=w.dtype)
+    col = np.zeros((m, k), dtype=np.int32)
+    for i in range(m):
+        (ci,) = np.nonzero(w[i])
+        val[i, : len(ci)] = w[i, ci]
+        col[i, : len(ci)] = ci
+    return EllMatrix(value=jnp.asarray(val), colidx=jnp.asarray(col),
+                     nnz=jnp.asarray(nnz.astype(np.int32)), shape=(m, n))
+
+
+def ell_to_dense(ell: EllMatrix) -> jax.Array:
+    """Inverse of ``ell_from_dense`` (oracle for round-trip property tests).
+
+    Padding entries all carry value 0, so scatter-add is safe even though they
+    alias column 0.
+    """
+    m, n = ell.shape
+    out = jnp.zeros((m, n), dtype=ell.value.dtype)
+    rows = jnp.arange(m)[:, None] * jnp.ones_like(ell.colidx)
+    return out.at[rows, ell.colidx].add(ell.value)
+
+
+# ---------------------------------------------------------------------------
+# BCSR (block compressed sparse row) for the MXU path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BcsrMatrix:
+    """Block-sparse (M, N) weight.
+
+    blocks:   (nbr, KB, bm, bn) -- per block-row, KB padded dense tiles
+    blockcol: (nbr, KB) int32   -- block-column id of each tile (0 for padding)
+    nblocks:  (nbr,) int32      -- true tiles per block-row
+    shape:    original (M, N); block: (bm, bn)
+    """
+
+    blocks: jax.Array
+    blockcol: jax.Array
+    nblocks: jax.Array
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+
+    @property
+    def kb(self) -> int:
+        return int(self.blocks.shape[1])
+
+    def tree_flatten(self):
+        return (self.blocks, self.blockcol, self.nblocks), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, block = aux
+        return cls(*leaves, shape=shape, block=block)
+
+
+jax.tree_util.register_pytree_node(
+    BcsrMatrix, BcsrMatrix.tree_flatten, BcsrMatrix.tree_unflatten)
+
+
+def bcsr_from_dense(w, block: Tuple[int, int] = (128, 128), pad_to: int = 1) -> BcsrMatrix:
+    """Convert a (block-pruned) dense matrix to BCSR.
+
+    A tile is kept iff it contains any nonzero.  Rows are padded to a common
+    tile count KB so shapes are static; padding tiles are all-zero data at
+    block-column 0 (inert).
+    """
+    w = np.asarray(w)
+    m, n = w.shape
+    bm, bn = block
+    pm, pn = (-m) % bm, (-n) % bn
+    wp = np.pad(w, ((0, pm), (0, pn)))
+    gm, gn = wp.shape[0] // bm, wp.shape[1] // bn
+    tiles = wp.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)  # (gm, gn, bm, bn)
+    keep = (tiles != 0).any(axis=(2, 3))                      # (gm, gn)
+    counts = keep.sum(axis=1)
+    kb = max(1, int(counts.max()))
+    kb = ((kb + pad_to - 1) // pad_to) * pad_to
+    blocks = np.zeros((gm, kb, bm, bn), dtype=w.dtype)
+    bcol = np.zeros((gm, kb), dtype=np.int32)
+    for i in range(gm):
+        (cols,) = np.nonzero(keep[i])
+        blocks[i, : len(cols)] = tiles[i, cols]
+        bcol[i, : len(cols)] = cols
+    return BcsrMatrix(blocks=jnp.asarray(blocks), blockcol=jnp.asarray(bcol),
+                      nblocks=jnp.asarray(counts.astype(np.int32)),
+                      shape=(m, n), block=block)
+
+
+def bcsr_to_dense(b: BcsrMatrix) -> jax.Array:
+    m, n = b.shape
+    bm, bn = b.block
+    gm = b.blocks.shape[0]
+    gn = (n + bn - 1) // bn
+    out = jnp.zeros((gm, gn, bm, bn), dtype=b.blocks.dtype)
+    rows = jnp.arange(gm)[:, None] * jnp.ones_like(b.blockcol)
+    out = out.at[rows, b.blockcol].add(b.blocks)
+    dense = out.transpose(0, 2, 1, 3).reshape(gm * bm, gn * bn)
+    return dense[:m, :n]
+
+
+def bcsr_stack_from_dense(w3d, block: Tuple[int, int] = (128, 128)) -> BcsrMatrix:
+    """Convert a stacked (L, M, N) weight to a stacked BCSR (leading L on
+    every leaf) so it can ride through a ``lax.scan`` over layers: slicing the
+    leading axis of each leaf yields exactly the per-layer ``BcsrMatrix``.
+    Rows are padded to the max tile count across all layers."""
+    w3d = np.asarray(w3d)
+    per_layer = [bcsr_from_dense(w3d[i], block) for i in range(w3d.shape[0])]
+    kb = max(b.kb for b in per_layer)
+    blocks, bcol, nb = [], [], []
+    for b in per_layer:
+        pad = kb - b.kb
+        blocks.append(np.pad(np.asarray(b.blocks), ((0, 0), (0, pad), (0, 0), (0, 0))))
+        bcol.append(np.pad(np.asarray(b.blockcol), ((0, 0), (0, pad))))
+        nb.append(np.asarray(b.nblocks))
+    return BcsrMatrix(
+        blocks=jnp.asarray(np.stack(blocks)), blockcol=jnp.asarray(np.stack(bcol)),
+        nblocks=jnp.asarray(np.stack(nb)),
+        shape=per_layer[0].shape, block=block)
+
+
+def csr_arrays_from_dense(w) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Classic CSR triplet (value, colidx, rowptr) — Fig. 4 of the paper.
+
+    Used by the lowered CUSPARSE-analogue baseline and by format round-trip
+    tests; not consumed by jit code (ragged).
+    """
+    w = np.asarray(w)
+    m, _ = w.shape
+    rowptr = np.zeros(m + 1, dtype=np.int32)
+    vals, cols = [], []
+    for i in range(m):
+        (ci,) = np.nonzero(w[i])
+        vals.append(w[i, ci])
+        cols.append(ci.astype(np.int32))
+        rowptr[i + 1] = rowptr[i] + len(ci)
+    value = np.concatenate(vals) if vals else np.zeros(0, w.dtype)
+    colidx = np.concatenate(cols) if cols else np.zeros(0, np.int32)
+    return value, colidx, rowptr

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset, ShardedLoader,
+                                 make_loader)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "ShardedLoader", "make_loader"]

@@ -1,0 +1,123 @@
+"""Logical-axis sharding rules (MaxText-style) for the whole framework.
+
+Params and activations are annotated with *logical* names; a rules table maps
+them to physical mesh axes at launch time.  This keeps every model definition
+mesh-agnostic and makes resharding experiments (§Perf hillclimbs) one-line
+changes.
+
+Logical names:
+  fsdp  -- parameter / optimizer-state sharding (ZeRO-3) axis
+  tp    -- tensor parallel axis (heads, d_ff columns, experts, vocab)
+  dp    -- activation batch axis (pure data parallel, incl. the pod axis)
+  sp    -- sequence parallel axis for long-context activations
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Axis]:
+    """DP over (pod, data); FSDP over data only (keeps ZeRO gathers on the
+    fast in-pod ICI, cross-pod stays pure gradient DP over DCN); TP/SP/EP over
+    model."""
+    has_pod = "pod" in mesh.axis_names
+    return {
+        "fsdp": "data",
+        "tp": "model",
+        "dp": ("pod", "data") if has_pod else ("data",),
+        "sp": "model",
+    }
+
+
+def set_rules(rules: Optional[Dict[str, Axis]], mesh: Optional[Mesh] = None) -> None:
+    _STATE.rules = rules
+    _STATE.mesh = mesh
+
+
+def get_rules() -> Optional[Dict[str, Axis]]:
+    return getattr(_STATE, "rules", None)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+class use_rules:
+    """Context manager: activate a rules table (and mesh) for tracing."""
+
+    def __init__(self, rules: Optional[Dict[str, Axis]], mesh: Optional[Mesh] = None):
+        self.rules, self.mesh = rules, mesh
+
+    def __enter__(self):
+        self.prev = (get_rules(), get_mesh())
+        set_rules(self.rules, self.mesh)
+        return self
+
+    def __exit__(self, *exc):
+        set_rules(*self.prev)
+        return False
+
+
+def resolve(spec: P) -> P:
+    """Map a logical PartitionSpec to physical mesh axes.
+
+    Unknown names map to None (replicated); tuples of names flatten.  A mesh
+    axis may appear at most once per spec — when two logical names map to the
+    same physical axis (e.g. serving rules with fsdp -> model), the first
+    position keeps it and later positions drop to None.
+    """
+    rules = get_rules() or {}
+    used: set = set()
+
+    def one(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            out = []
+            for e in entry:
+                r = one(e)
+                if isinstance(r, tuple):
+                    out.extend(r)
+                elif r is not None:
+                    out.append(r)
+            return tuple(out) if out else None
+        r = rules.get(entry, entry if entry in _mesh_axes() else None)
+        if r is None:
+            return None
+        axes = r if isinstance(r, tuple) else (r,)
+        kept = tuple(a for a in axes if a not in used)
+        used.update(kept)
+        if not kept:
+            return None
+        return kept if isinstance(r, tuple) else kept[0]
+
+    return P(*(one(e) for e in spec))
+
+
+def _mesh_axes() -> Sequence[str]:
+    mesh = get_mesh()
+    return mesh.axis_names if mesh is not None else ()
+
+
+def constrain(x: jax.Array, *names: Axis) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a mesh run."""
+    mesh = get_mesh()
+    if mesh is None or get_rules() is None:
+        return x
+    spec = resolve(P(*names))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(spec: P) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(spec))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (each: kernel.py + ops.py wrapper + ref.py oracle).
+
+sparse_conv      -- the paper's direct sparse convolution (CSR + weight
+                    stretching + dynamic indexing), TPU-adapted
+bsr_matmul       -- beyond-paper block-sparse matmul on the MXU
+flash_attention  -- fused attention (fwd + custom-vjp bwd); removes the
+                    T^2 logits HBM traffic the rooflines flagged
+"""

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: block-sparse (BCSR) matmul on the MXU.
+
+Beyond-paper TPU adaptation of Escoin (DESIGN.md §2): unstructured CSR can
+never feed the 128x128 systolic array, so pruning at tile granularity keeps
+surviving tiles dense and MXU-eligible while zero tiles are *structurally*
+skipped — the TPU-native way to turn weight sparsity into speed.
+
+Mechanics (the canonical scalar-prefetch gather pattern):
+  * grid = (batch_tiles, block_rows, KB) with KB innermost so the output block
+    stays resident in VMEM and accumulates across the KB steps.
+  * the input BlockSpec's index_map reads the scalar-prefetched ``blockcol``
+    array, so the pipeline fetches exactly the x tile each nonzero weight tile
+    needs — HBM traffic scales with nnz blocks, not with N.
+  * rows shorter than KB mask the tail via ``pl.when`` on ``nblocks``; the
+    compute (though not the final fetch) is skipped.
+
+Computes y = x @ W.T with W of logical shape (M, N): x tiles are (TB, bn),
+weight tiles (bm, bn), out tiles (TB, bm) accumulated in float32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(blockcol_ref, nblocks_ref,   # scalar prefetch (SMEM)
+            x_ref, w_ref,                # VMEM in: (TB, bn), (1, 1, bm, bn)
+            out_ref):                    # VMEM out: (TB, bm) f32
+    i = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(kb < nblocks_ref[i])
+    def _accum():
+        out_ref[...] += jax.lax.dot_general(
+            x_ref[...], w_ref[0, 0],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def bsr_matmul_pallas(x: jax.Array, blocks: jax.Array, blockcol: jax.Array,
+                      nblocks: jax.Array, *, tb: int,
+                      interpret: bool = False) -> jax.Array:
+    """y = x @ W.T for BCSR W.
+
+    Args:
+      x:        (B, N) with B % tb == 0 and N % bn == 0 (ops.py pads).
+      blocks:   (gm, KB, bm, bn) dense nonzero tiles.
+      blockcol: (gm, KB) int32 block-column ids.
+      nblocks:  (gm,) int32 true tiles per block-row.
+      tb:       batch tile size.
+
+    Returns: (B, gm*bm) float32.
+    """
+    b, n = x.shape
+    gm, kb_dim, bm, bn = blocks.shape
+    assert b % tb == 0 and n % bn == 0, (x.shape, blocks.shape, tb)
+    grid = (b // tb, gm, kb_dim)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                # The gather: x's block column follows the weight's blockcol.
+                pl.BlockSpec((tb, bn),
+                             lambda bt, i, kb, bc, nb: (bt, bc[i, kb])),
+                pl.BlockSpec((1, 1, bm, bn),
+                             lambda bt, i, kb, bc, nb: (i, kb, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tb, bm),
+                                   lambda bt, i, kb, bc, nb: (bt, i)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, gm * bm), jnp.float32),
+        interpret=interpret,
+    )(blockcol, nblocks, x, blocks)

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the BCSR MXU matmul kernel.
+
+Handles batch flattening/padding, batch-tile autotuning, and the dtype
+policy (inputs as given, float32 accumulate, cast back on exit).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import BcsrMatrix
+from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
+
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def choose_tb(b: int, bm: int, bn: int, itemsize: int) -> int:
+    """Largest batch tile whose (x tile + out tile + weight tile) fits VMEM.
+
+    The MXU wants >=128 rows; going bigger amortises the weight-tile fetch
+    across more batch rows (weight reuse — the paper's Fig. 7 argument).
+    """
+    for tb in (1024, 512, 256, 128, 64, 32, 16, 8):
+        if b % tb:
+            continue
+        need = tb * bn * itemsize + tb * bm * 4 + bm * bn * itemsize
+        if need <= _VMEM_BUDGET:
+            return tb
+    return 8
+
+
+def bsr_matmul(x: jax.Array, w: BcsrMatrix, *, tb: Optional[int] = None,
+               interpret: bool = False) -> jax.Array:
+    """y = x @ W.T for BCSR weight W of logical shape (M, N).
+
+    x: (..., N) any leading batch dims.  Returns (..., M) in x.dtype.
+    """
+    m, n = w.shape
+    bm, bn = w.block
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, x.shape[-1])
+    b = xb.shape[0]
+    pad_n = (-n) % bn
+    if pad_n:
+        xb = jnp.pad(xb, ((0, 0), (0, pad_n)))
+    if tb is None:
+        tb = choose_tb(max(b, 8), bm, bn, xb.dtype.itemsize)
+    pad_b = (-b) % tb
+    if pad_b:
+        xb = jnp.pad(xb, ((0, pad_b), (0, 0)))
+    out = bsr_matmul_pallas(xb, w.blocks, w.blockcol, w.nblocks, tb=tb,
+                            interpret=interpret)
+    return out[:b, :m].reshape(lead + (m,)).astype(x.dtype)

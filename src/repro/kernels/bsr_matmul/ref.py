@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the BCSR matmul kernel: dense matmul on the
+reconstructed dense weight (sparsity must not change semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_format import BcsrMatrix, bcsr_to_dense
+
+
+def bsr_matmul_ref(x: jax.Array, b: BcsrMatrix) -> jax.Array:
+    """y = x @ W.T in float32, from the dense reconstruction of W."""
+    w = bcsr_to_dense(b).astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w.T,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,233 @@
+"""Pallas TPU flash attention (fwd + bwd kernels, causal, GQA-aware).
+
+Why it exists here: the dry-run rooflines show the memory term of every
+32k-prefill/train cell dominated by XLA materialising the (T, T) attention
+logits in float32 HBM.  Keeping the logits tile-resident in VMEM (the flash
+schedule) removes that traffic — exactly the paper's locality thesis
+("orchestrate on-chip memory so off-chip traffic scales with the data, not
+with the algorithm's intermediate"), applied to attention.
+
+Layout: q (B, H, T, d), k/v (B, KV, S, d), GQA via H = KV * G (the kernel
+maps head h to kv head h // G in the BlockSpec index maps, so K/V are never
+expanded in HBM).  Causal masking skips whole kv-chunks past the q-chunk
+(dynamic fori bound), halving the work vs a masked full sweep.
+
+Backward uses the standard recompute formulation:
+  P = exp(QK^T * sc - lse);  dV = P^T dO;  dP = dO V^T
+  dS = P * (dP - delta),  delta = rowsum(dO * O)
+  dQ = dS K * sc;  dK = dS^T Q * sc
+split into a dq kernel (grid over q chunks) and a dkv kernel (grid over kv
+chunks) so each output block is written by exactly one grid cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *,
+                sc: float, causal: bool, cq: int, ck: int, nk: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * sc            # (cq, d)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(ki * ck, ck), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(ki * ck, ck), :].astype(jnp.float32)
+        s = q @ k.T                                     # (cq, ck)
+        if causal:
+            qpos = qi * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+            kpos = ki * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((cq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((cq,), jnp.float32)
+    a0 = jnp.zeros((cq, q_ref.shape[-1]), jnp.float32)
+    # causal chunk skip: process kv chunks that overlap [0, (qi+1)*cq)
+    hi = ((qi + 1) * cq + ck - 1) // ck if causal else nk
+    m, l, acc = lax.fori_loop(0, hi, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[0, 0] = m + jnp.log(l)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *,
+               sc: float, causal: bool, cq: int, ck: int, nk: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+
+    def body(ki, dq):
+        k = k_ref[0, 0, pl.ds(ki * ck, ck), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(ki * ck, ck), :].astype(jnp.float32)
+        s = (q * sc) @ k.T
+        if causal:
+            qpos = qi * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+            kpos = ki * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v.T
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    hi = ((qi + 1) * cq + ck - 1) // ck if causal else nk
+    dq0 = jnp.zeros_like(q)
+    dq = lax.fori_loop(0, hi, body, dq0)
+    dq_ref[0, 0] = (dq * sc).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, *,
+                sc: float, causal: bool, cq: int, ck: int, nq: int, g: int):
+    ki = pl.program_id(2)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (ck, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    def head_body(gi, carry):
+        dk, dv = carry
+
+        def body(qi2, carry2):
+            dk2, dv2 = carry2
+            q = q_ref[0, gi, pl.ds(qi2 * cq, cq), :].astype(jnp.float32)
+            do = do_ref[0, gi, pl.ds(qi2 * cq, cq), :].astype(jnp.float32)
+            lse = lse_ref[0, gi, pl.ds(qi2 * cq, cq)]
+            delta = delta_ref[0, gi, pl.ds(qi2 * cq, cq)]
+            s = (q * sc) @ k.T                          # (cq, ck)
+            if causal:
+                qpos = qi2 * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+                kpos = ki * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+                s = jnp.where(qpos >= kpos, s, NEG_INF)
+            p = jnp.exp(s - lse[:, None])
+            dv3 = dv2 + p.T @ do
+            dp = do @ v.T
+            ds = p * (dp - delta[:, None])
+            dk3 = dk2 + ds.T @ q
+            return dk3, dv3
+
+        lo = ki * ck // cq if causal else 0             # first q chunk that sees us
+        dk, dv = lax.fori_loop(lo, nq, body, (dk, dv))
+        return dk, dv
+
+    dk0 = jnp.zeros_like(k)
+    dv0 = jnp.zeros_like(v)
+    dk, dv = lax.fori_loop(0, g, head_body, (dk0, dv0))
+    dk_ref[0, 0] = (dk * sc).astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _fwd_call(q, k, v, *, sc, causal, cq, ck, interpret):
+    b, h, t, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = t // cq, s // ck
+    kern = functools.partial(_fwd_kernel, sc=sc, causal=causal, cq=cq, ck=ck,
+                             nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, cq), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _bwd_call(q, k, v, o, lse, do, *, sc, causal, cq, ck, interpret):
+    b, h, t, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    nq, nk = t // cq, s // ck
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, sc=sc, causal=causal, cq=cq, ck=ck,
+                          nk=nk),
+        grid=(b, h, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, cq), lambda bi, hi, qi: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, cq), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, sc=sc, causal=causal, cq=cq, ck=ck,
+                          nq=nq, g=g),
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, t, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1, g, t, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, g, t), lambda bi, ki, si: (bi, ki, 0)),
+            pl.BlockSpec((1, g, t), lambda bi, ki, si: (bi, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ck, d), lambda bi, ki, si: (bi, ki, si, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bi, ki, si: (bi, ki, si, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, sc: float, causal: bool, cq: int, ck: int,
+                    interpret: bool):
+    o, _ = _fwd_call(q, k, v, sc=sc, causal=causal, cq=cq, ck=ck,
+                     interpret=interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, sc, causal, cq, ck, interpret):
+    o, lse = _fwd_call(q, k, v, sc=sc, causal=causal, cq=cq, ck=ck,
+                       interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(sc, causal, cq, ck, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, o, lse, do, sc=sc, causal=causal,
+                           cq=cq, ck=ck, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

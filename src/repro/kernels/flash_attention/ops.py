@@ -1,0 +1,36 @@
+"""Jit'd wrapper: (B, T, H, hd) model layout -> kernel layout + chunk tuning."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def choose_chunks(t: int, s: int, d: int, itemsize: int):
+    """Largest power-of-two chunks with (q + k + v + p) tiles inside VMEM."""
+    for c in (1024, 512, 256, 128):
+        if t % c or s % c:
+            continue
+        need = c * d * itemsize * 3 + c * c * 4 + c * d * 4
+        if need <= _VMEM_BUDGET:
+            return c, c
+    return min(128, t), min(128, s)
+
+
+def flash_attention_bthd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, scale: Optional[float] = None,
+                         chunk: Optional[int] = None,
+                         interpret: bool = False) -> jax.Array:
+    """q (B, T, H, hd), k/v (B, S, KV, hd) -> (B, T, H, hd)."""
+    from repro.kernels.flash_attention.kernel import flash_attention
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    sc = scale if scale is not None else hd ** -0.5
+    cq, ck = (chunk, chunk) if chunk else choose_chunks(t, s, hd, q.dtype.itemsize)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), sc, causal, cq, ck, interpret)
+    return out.transpose(0, 2, 1, 3)

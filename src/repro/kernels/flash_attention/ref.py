@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel: naive softmax attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, scale: Optional[float] = None) -> jax.Array:
+    """q (B, H, T, d), k/v (B, KV, S, d) -> (B, H, T, d), float32 math."""
+    b, h, t, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.reshape(b, kv, g, t, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qf, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(t)[:, None] >= jnp.arange(s)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, t, d).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the direct sparse conv kernel.
+
+The oracle is XLA's dense convolution over the zero-filled weights — sparsity
+is a performance transform, not a semantic one, so dense conv defines the
+ground truth (same contract the paper uses: CUBLAS output == Escort output).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def sparse_conv_ref(x: jax.Array, w_dense: jax.Array, *, stride: int = 1,
+                    padding: int = 0) -> jax.Array:
+    """(N, C, H, W) x (M, C, R, S) -> (N, M, E, F), float32 accumulate."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w_dense.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32)

@@ -1,0 +1,50 @@
+"""Probe-enrichment pass: re-run single-pod cells whose JSON lacks probe
+extrapolation (probe_info == null), in priority order (train > prefill >
+decode; small archs first so the table fills fastest).
+
+  PYTHONPATH=src python -m repro.launch.enrich [--max-cells N]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import traceback
+
+from repro import configs as cfgs
+from repro.launch.dryrun import RESULTS_DIR, lower_cell
+
+KIND_PRIORITY = {"train": 0, "prefill": 1, "decode": 2}
+
+
+def pending():
+    cells = []
+    for arch, shape in cfgs.all_cells():
+        path = RESULTS_DIR / f"{arch}__{shape.name}__16x16.json"
+        if path.exists():
+            d = json.loads(path.read_text())
+            if d.get("probe_info"):
+                continue
+        cells.append((arch, shape))
+    cells.sort(key=lambda c: (KIND_PRIORITY[c[1].kind],
+                              cfgs.get_config(c[0]).num_params()))
+    return cells
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-cells", type=int, default=1000)
+    args = ap.parse_args()
+    todo = pending()
+    print(f"{len(todo)} cells pending probe enrichment")
+    for arch, shape in todo[: args.max_cells]:
+        remat = "full" if cfgs.get_config(arch).num_params() > 5e10 else "dots"
+        try:
+            lower_cell(arch, shape.name, multi_pod=False, remat=remat,
+                       probes=True)
+        except Exception:
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

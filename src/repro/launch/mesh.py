@@ -1,0 +1,43 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2x16x16 = 512 chips (pod, data, model); the pod axis crosses DCN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == need:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devs)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import")
+    # e.g. 512 forced host devices, single-pod mesh uses the first 256
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (elastic re-mesh / tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: Optional[int] = None) -> Mesh:
+    """Whatever this host has (CPU tests / examples): (data, model)."""
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

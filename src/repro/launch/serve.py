@@ -1,0 +1,105 @@
+"""Serving driver: batched prefill + decode with KV cache (+ Escoin sparsity).
+
+With --sparsity > 0, every linear weight is magnitude/block pruned and served
+through the Escoin BCSR path (the paper's technique as a serving feature).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+      --batch 4 --prompt-len 32 --gen 16 --sparsity 0.8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgs
+from repro.core.pruning import block_prune
+from repro.core.sparse_format import bcsr_from_dense, bcsr_stack_from_dense
+from repro.launch.steps import make_serve_step
+from repro.models import transformer as T
+
+
+def sparsify_params(params, cfg, sparsity: float, block=(16, 16), min_dim=64):
+    """Prune + convert every large 2-D linear weight to Escoin BCSR."""
+    def visit(p):
+        if isinstance(p, dict):
+            return {k: (visit(v) if isinstance(v, (dict, list)) else conv(k, v))
+                    for k, v in p.items()}
+        if isinstance(p, list):
+            return [visit(v) for v in p]
+        return p
+
+    skip = {"embed", "lm_head", "router", "conv_w"}
+
+    def conv(name, w):
+        if name in skip or not hasattr(w, "ndim"):
+            return w
+        if w.ndim == 2 and min(w.shape) >= min_dim:
+            pruned = block_prune(w.astype(jnp.float32), sparsity, block)
+            # stored as (in, out); BCSR computes x @ W.T for (out, in)
+            return bcsr_from_dense(np.asarray(pruned).T, block)
+        if w.ndim == 3 and min(w.shape[1:]) >= min_dim:
+            # stacked (L, in, out) weight inside the scanned stack
+            pruned = jax.vmap(lambda m: block_prune(m, sparsity, block))(
+                w.astype(jnp.float32))
+            return bcsr_stack_from_dense(
+                np.asarray(pruned).transpose(0, 2, 1), block)
+        return w
+
+    return visit(params)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sparsity", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = cfgs.get_config(args.arch, smoke=args.smoke)
+    if cfg.family == "encoder":
+        raise SystemExit("encoder-only arch has no decode step")
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    if args.sparsity > 0:
+        params = sparsify_params(params, cfg, args.sparsity)
+        print(f"serving with Escoin BCSR weights at sparsity {args.sparsity}")
+
+    b, p, g = args.batch, args.prompt_len, args.gen
+    max_len = p + g
+    prompts = jax.random.randint(key, (b, p), 0, cfg.vocab, jnp.int32)
+    cache = T.init_cache(cfg, b, max_len)
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+    # prefill token-by-token (smoke-scale; production uses the prefill step)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for i in range(p):
+        nxt, cache = serve_step(params, prompts[:, i:i + 1], cache,
+                                jnp.int32(i))
+    t_prefill = time.time() - t0
+
+    out = [nxt]
+    t0 = time.time()
+    for i in range(p, p + g - 1):
+        nxt, cache = serve_step(params, out[-1][:, None], cache, jnp.int32(i))
+        out.append(nxt)
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    assert gen.shape == (b, g), gen.shape
+    assert np.isfinite(gen).all()
+    print(f"generated {g} tokens x {b} seqs; prefill {t_prefill:.2f}s, "
+          f"decode {t_decode:.2f}s ({t_decode / max(g - 1, 1) * 1e3:.1f} ms/tok)")
+    print("sample:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Abstract Escoin-BCSR weight trees for the serving dry-run (§Perf C).
+
+At decode, weight bytes are the HBM-traffic floor; Escoin's thesis is that
+pruning should buy speed, not just space.  This module rewrites the abstract
+(ShapeDtypeStruct) parameter tree so every large projection is stored as a
+``BcsrMatrix`` whose block count reflects the target sparsity — the compiled
+serving step then *reads 1-sparsity of the weight bytes*, and the roofline
+memory term shows exactly the win real pruned serving would get.
+
+No weight values exist (dry-run): block counts are the deterministic
+``ceil(tiles * density)``; correctness of the BCSR path itself is covered by
+the kernel/system tests.
+
+Block geometry: bm = M / tp so the block-row axis shards exactly tp ways
+(jit in_shardings require divisibility); bn = 128 (lane width).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sparse_format import BcsrMatrix
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+SKIP = {"embed", "lm_head", "router", "conv_w", "q_norm", "kv_norm"}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _abstract_bcsr(m: int, n: int, dtype, tp: int, sparsity: float,
+                   stack: Tuple[int, ...] = ()) -> Tuple[Any, Any]:
+    """(BcsrMatrix of ShapeDtypeStructs, BcsrMatrix of PartitionSpecs) for a
+    logical (M=out, N=in) weight, optionally layer-stacked."""
+    bm = m // tp if (m % tp == 0 and m // tp >= 8) else m
+    bn = 128 if n % 128 == 0 else n
+    gm, gn = m // bm, n // bn
+    kb = max(1, math.ceil(gn * (1.0 - sparsity)))
+    lead = stack
+    sd = BcsrMatrix(
+        blocks=_sds(lead + (gm, kb, bm, bn), dtype),
+        blockcol=_sds(lead + (gm, kb), jnp.int32),
+        nblocks=_sds(lead + (gm,), jnp.int32),
+        shape=(m, n), block=(bm, bn))
+    row = ("tp",) if gm == tp else (None,)
+    pre = (None,) * len(lead)
+    sp = BcsrMatrix(
+        blocks=P(*(pre + row + (None, None, None))),
+        blockcol=P(*(pre + row + (None,))),
+        nblocks=P(*(pre + row)),
+        shape=(m, n), block=(bm, bn))
+    return sd, sp
+
+
+def abstract_sparse_params(cfg: ModelConfig, tp: int, sparsity: float,
+                           min_dim: int = 512) -> Tuple[Any, Any]:
+    """(abstract param tree, spec tree) with BCSR projections.
+
+    Walks the dense abstract tree and its spec tree together; eligible dense
+    leaves (2-D (in, out) or layer-stacked 3-D, both dims >= min_dim, not in
+    SKIP) become abstract BcsrMatrix leaves over W^T.
+    """
+    dense = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = T.param_specs(cfg, tp)
+
+    def convert(name, leaf, spec):
+        if name in SKIP or not hasattr(leaf, "ndim"):
+            return leaf, spec
+        if leaf.ndim == 2 and min(leaf.shape) >= min_dim:
+            return _abstract_bcsr(leaf.shape[1], leaf.shape[0], leaf.dtype,
+                                  tp, sparsity)
+        if leaf.ndim == 3 and min(leaf.shape[1:]) >= min_dim:
+            return _abstract_bcsr(leaf.shape[2], leaf.shape[1], leaf.dtype,
+                                  tp, sparsity, stack=(leaf.shape[0],))
+        return leaf, spec
+
+    def walk2(d, s):
+        if isinstance(d, dict):
+            out_d, out_s = {}, {}
+            for k in d:
+                if isinstance(d[k], (dict, list)):
+                    out_d[k], out_s[k] = walk2(d[k], s[k])
+                else:
+                    out_d[k], out_s[k] = convert(k, d[k], s[k])
+            return out_d, out_s
+        if isinstance(d, list):
+            pairs = [walk2(a, b) for a, b in zip(d, s)]
+            return [p[0] for p in pairs], [p[1] for p in pairs]
+        return d, s
+
+    return walk2(dense, specs)

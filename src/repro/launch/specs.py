@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation ever happens here — these feed ``jit(...).lower()``.
+[audio]/[vlm] archs take precomputed frame/patch embeddings (frontend stub).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+
+STUB_EMBED_FAMILIES = ("vlm", "encoder")   # modality frontend is a stub
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(ShapeDtypeStructs, logical PartitionSpecs) for one train batch."""
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.family in STUB_EMBED_FAMILIES:
+        specs = {"embeds": sds((b, t, cfg.d_model), cfg.dtype),
+                 "labels": sds((b, t), jnp.int32)}
+        parts = {"embeds": P("dp", "sp", None), "labels": P("dp", "sp")}
+    else:
+        specs = {"tokens": sds((b, t), jnp.int32),
+                 "labels": sds((b, t), jnp.int32)}
+        parts = {"tokens": P("dp", "sp"), "labels": P("dp", "sp")}
+    return specs, parts
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.family in STUB_EMBED_FAMILIES:
+        return ({"embeds": sds((b, t, cfg.d_model), cfg.dtype)},
+                {"embeds": P("dp", "sp", None)})
+    return ({"tokens": sds((b, t), jnp.int32)}, {"tokens": P("dp", "sp")})
+
+
+def _drop_batch_axis(parts):
+    """Replace the leading 'dp' entry with None on every spec (batch size not
+    divisible by the dp extent, e.g. long_500k's global_batch=1 — jit
+    in_shardings require divisibility, unlike sharding constraints)."""
+    def fix(spec: P) -> P:
+        return P(*(None if e == "dp" else e for e in tuple(spec)))
+    return jax.tree.map(fix, parts, is_leaf=lambda s: isinstance(s, P))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, tp: int,
+                       dp: int = 1) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """tokens (B, 1) + full KV/SSM cache of seq_len + cur_len scalar."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    cache_parts = T.cache_specs(cfg, tp)
+    specs = {"tokens": sds((b, 1), jnp.int32), "cache": cache,
+             "cur_len": sds((), jnp.int32)}
+    parts = {"tokens": P("dp", None), "cache": cache_parts, "cur_len": P(),
+             "next_tokens": P("dp")}
+    if dp and b % dp:
+        parts = _drop_batch_axis(parts)
+    return specs, parts
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, tp: int, dp: int = 1
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape, tp, dp)

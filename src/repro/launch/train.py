@@ -1,0 +1,116 @@
+"""Training driver: end-to-end loop with checkpoint/restart + monitoring.
+
+Runs any registered arch on whatever devices exist (CPU-runnable with smoke
+configs; the same code path lowers against the production meshes).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs as cfgs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, make_loader
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import init_state, make_train_step, state_shardings
+from repro.models import flags as F
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.runtime import StepRunner, StragglerMonitor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", type=str, default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--remat", type=str, default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = cfgs.get_config(args.arch, smoke=args.smoke)
+    F.set_remat(args.remat)
+    mesh = make_host_mesh(model=args.model_axis)
+    tp = mesh.shape["model"]
+    opt_cfg = AdamWConfig(lr=args.lr)
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab=cfg.vocab, seed=args.seed,
+                      embed_dim=cfg.d_model if cfg.family in ("vlm", "encoder")
+                      else 0)
+
+    with mesh:
+        with shd.use_rules(shd.default_rules(mesh), mesh):
+            state_ns = state_shardings(cfg, mesh, tp)
+            step_fn = make_train_step(cfg, opt_cfg,
+                                      num_microbatches=args.microbatches,
+                                      total_steps=args.steps)
+            jit_step = jax.jit(step_fn, in_shardings=(state_ns, None),
+                               out_shardings=(state_ns, None),
+                               donate_argnums=(0,))
+            state = init_state(cfg, opt_cfg, jax.random.PRNGKey(args.seed))
+            state = jax.device_put(state, state_ns)
+
+            ckpt = CheckpointManager(args.ckpt_dir or "/tmp/repro_ckpt", keep=2)
+            restored, ck_step = (ckpt.restore_latest(
+                jax.eval_shape(lambda s: s, state), shardings=state_ns)
+                if args.ckpt_dir else (None, None))
+            start = 0
+            if restored is not None:
+                state, start = restored, ck_step
+                print(f"resumed from step {start}")
+
+            def to_device(batch):
+                return {k: jax.device_put(
+                    v, NamedSharding(mesh, shd.resolve(
+                        PartitionSpec(*(("dp",) + (None,) * (v.ndim - 1))))))
+                    for k, v in batch.items()}
+
+            def step_and_log(st, batch):
+                st, m = jit_step(st, to_device(batch))
+                return st, m
+
+            runner = StepRunner(step_and_log, ckpt,
+                                lambda s: make_loader(dcfg, s),
+                                ckpt_every=args.ckpt_every,
+                                monitor=StragglerMonitor())
+            t0 = time.time()
+            losses = []
+
+            def on_metrics(step, m):
+                losses.append(m.get("loss", float("nan")))
+                if step % 5 == 0 or step == start + 1:
+                    print(f"step {step}: loss={m.get('loss'):.4f} "
+                          f"gnorm={m.get('grad_norm'):.3f} lr={m.get('lr'):.2e}")
+
+            state, end = runner.run(state, start, args.steps,
+                                    on_metrics=on_metrics)
+            dt = time.time() - t0
+            k = min(5, len(losses))
+            first, last = float(np.mean(losses[:k])), float(np.mean(losses[-k:]))
+            print(f"trained {end - start} steps in {dt:.1f}s "
+                  f"({dt / max(end - start, 1):.2f}s/step); "
+                  f"loss {first:.4f} -> {last:.4f}")
+            if not np.isfinite(last):
+                raise SystemExit("loss diverged — check config")
+            if len(losses) >= 50 and last > first + 0.05:
+                raise SystemExit("loss did not improve — check config")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: the transformer stack for the 10 assigned architectures
+(transformer.py + layers.py + config.py) and the paper's CNNs (cnn.py)."""

@@ -1,0 +1,60 @@
+"""Lowering-mode flags shared by layers.py / transformer.py.
+
+These are launcher-controlled globals (not ModelConfig fields) so the same
+model code can be re-lowered under different analysis / perf modes:
+
+  REMAT    -- activation-checkpoint policy for the scanned stack.
+  UNROLL   -- unroll every loop (stack scan, attention chunk scans, SSD chunk
+              scan).  Used by the roofline *probe* compiles: XLA's
+              HloCostAnalysis counts a while-loop body once regardless of
+              trip count, so probes lower shallow fully-unrolled models and
+              the dry-run extrapolates exact per-block costs.
+  ATTN_CHUNK -- q/kv chunk size for the online-softmax attention.
+"""
+from __future__ import annotations
+
+REMAT = "none"
+UNROLL = False
+ATTN_CHUNK = 1024
+MOE_CAPACITY = 1.25   # expert capacity factor (drops above); perf/memory knob
+ATTN_IMPL = "chunked"  # chunked (jnp online softmax) | flash (Pallas kernel)
+MOE_CONSTRAIN = False  # explicit sharding constraints on MoE dispatch buffers
+MOE_IMPL = "gather"    # gather (auto-SPMD) | ep (all-to-all expert parallel)
+
+
+def set_moe_impl(impl: str) -> None:
+    global MOE_IMPL
+    assert impl in ("gather", "ep"), impl
+    MOE_IMPL = impl
+
+
+def set_attn_impl(impl: str) -> None:
+    global ATTN_IMPL
+    assert impl in ("chunked", "flash"), impl
+    ATTN_IMPL = impl
+
+
+def set_moe_constrain(flag: bool) -> None:
+    global MOE_CONSTRAIN
+    MOE_CONSTRAIN = bool(flag)
+
+
+def set_moe_capacity(f: float) -> None:
+    global MOE_CAPACITY
+    MOE_CAPACITY = float(f)
+
+
+def set_remat(policy: str) -> None:
+    global REMAT
+    assert policy in ("none", "dots", "full"), policy
+    REMAT = policy
+
+
+def set_unroll(flag: bool) -> None:
+    global UNROLL
+    UNROLL = bool(flag)
+
+
+def set_attn_chunk(n: int) -> None:
+    global ATTN_CHUNK
+    ATTN_CHUNK = int(n)

@@ -1,0 +1,745 @@
+"""Model building blocks shared by all assigned architectures.
+
+Conventions:
+  * params are nested dicts of arrays; linear weights are (in_features,
+    out_features) so application is ``x @ w``.
+  * every ``init_*`` has a mirror ``specs_*`` producing PartitionSpecs with
+    *logical* axis names ("fsdp", "tp") resolved by distributed/sharding.py.
+  * weights can be swapped for ``BcsrMatrix`` (Escoin block-sparse) leaves at
+    serve time; ``apply_linear`` dispatches on leaf type, so every projection
+    in every architecture is a sparsity site (DESIGN.md §4).
+  * attention is chunked with an online softmax so no (T, T) tensor is ever
+    materialised (required for the 32k shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sparse_format import BcsrMatrix, EllMatrix
+from repro.core.sparse_linear import bcsr_matmul, ell_matmul
+from repro.models import flags as F
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _norm_init(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def apply_linear(w, x: jax.Array, bias: Optional[jax.Array] = None) -> jax.Array:
+    """Linear application dispatching on the weight's storage format.
+
+    Dense (in, out) array -> x @ w.  BcsrMatrix / EllMatrix of logical shape
+    (out, in) -> Escoin sparse path.
+    """
+    if isinstance(w, BcsrMatrix):
+        y = bcsr_matmul(x, w)
+    elif isinstance(w, EllMatrix):
+        y = ell_matmul(x, w)
+    else:
+        y = jnp.einsum("...i,io->...o", x, w, preferred_element_type=jnp.float32)
+        y = y.astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (..., T, H, hd), positions: (..., T)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions: (B, T) -> angles (B, T, 1, half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _maybe(n: int, size: int, axis: str) -> Optional[str]:
+    """Shard dim of length n over ``axis`` only if divisible (DESIGN §5)."""
+    return axis if size > 0 and n % size == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention: flash Pallas kernel (flags.ATTN_IMPL="flash") or
+# the jnp chunked online-softmax fallback — no (T, T) materialisation either way
+# ---------------------------------------------------------------------------
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Dispatcher: q (B, T, H, hd), k/v (B, S, KV, hdv) -> (B, T, H, hdv).
+
+    flash path: Pallas kernel, sharded by hand over the tp axis via partial
+    shard_map (custom calls are not SPMD-partitionable).  GQA head grouping
+    is preserved across shards in two regimes:
+      A: whole kv groups per shard  ((H/tp) % g == 0) — kv heads sharded;
+      B: sub-group shards (g % (H/tp) == 0) — kv replicated, each shard
+         dynamic-slices its single kv head.
+    Shapes outside both regimes (e.g. qwen-4b's 20 heads on tp=16) fall back
+    to the chunked jnp path.  flash also requires hd == hdv (not MLA prefill's
+    192/128 split).
+    """
+    if F.ATTN_IMPL != "flash" or q.shape[-1] != v.shape[-1]:
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+    import functools as _ft
+
+    from repro.distributed import sharding as shd
+    from repro.kernels.flash_attention.ops import flash_attention_bthd
+
+    interp = jax.default_backend() == "cpu"
+    call = _ft.partial(flash_attention_bthd, causal=causal, scale=scale,
+                       interpret=interp)
+    mesh = shd.get_mesh()
+    h, kvh = q.shape[2], k.shape[2]
+    g = h // kvh
+    if mesh is None:
+        return call(q, k, v)
+    rules = shd.get_rules() or {}
+    ax = rules.get("tp")
+    if ax not in mesh.axis_names:
+        return call(q, k, v)
+    tp = mesh.shape[ax]
+    if h % tp:
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+    hq = h // tp
+    if hq % g == 0:
+        kv_spec = P(None, None, ax, None)
+        mode = "A"
+    elif g % hq == 0:
+        kv_spec = P(None, None, None, None)
+        mode = "B"
+    else:
+        return chunked_attention(q, k, v, causal=causal, scale=scale)
+
+    def local(qL, kL, vL):
+        if mode == "B":
+            idx = (jax.lax.axis_index(ax) * hq) // g
+            kL = lax.dynamic_slice_in_dim(kL, idx, 1, axis=2)
+            vL = lax.dynamic_slice_in_dim(vL, idx, 1, axis=2)
+        return call(qL, kL, vL)
+
+    return jax.shard_map(local, mesh=mesh,
+                         in_specs=(P(None, None, ax, None), kv_spec, kv_spec),
+                         out_specs=P(None, None, ax, None),
+                         axis_names={ax}, check_vma=False)(q, k, v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk_q: Optional[int] = None,
+                      chunk_k: Optional[int] = None,
+                      scale: Optional[float] = None) -> jax.Array:
+    """q: (B, T, H, hd), k/v: (B, S, KV, hd[v]) -> (B, T, H, hdv).
+
+    GQA: H is a multiple of KV; kv heads are repeated logically via reshape.
+    Double lax.scan (q chunks outer, kv chunks inner) keeps HLO size O(1) in T
+    and the live buffer at (B, H, cq, ck).  Under flags.UNROLL (roofline probe
+    compiles) both scans fully unroll so HloCostAnalysis sees every chunk.
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    chunk_q = chunk_q or F.ATTN_CHUNK
+    chunk_k = chunk_k or F.ATTN_CHUNK
+    cq, ck = min(chunk_q, t), min(chunk_k, s)
+    nq, nk = t // cq, s // ck
+    assert t % cq == 0 and s % ck == 0, (t, s, cq, ck)
+
+    qc = q.reshape(b, nq, cq, kv, g, hd).astype(jnp.float32) * scale
+    kc = k.reshape(b, nk, ck, kv, hd).astype(jnp.float32)
+    vc = v.reshape(b, nk, ck, kv, hdv).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qblk, qidx = qi  # (B, cq, KV, G, hd), scalar chunk index
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kidx = ki
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk)  # (B,KV,G,cq,ck)
+            if causal:
+                qpos = qidx * cq + jnp.arange(cq)
+                kpos = kidx * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vblk)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, hdv), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)), unroll=F.UNROLL)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,cq,hdv)
+        return None, out.transpose(0, 3, 1, 2, 4)             # (B,cq,KV,G,hdv)
+
+    _, outs = lax.scan(q_step, None,
+                       (qc.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)),
+                       unroll=F.UNROLL)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, t, h, hdv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, *, scale: Optional[float] = None) -> jax.Array:
+    """Single-position attention over a KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, KV, hd); cur_len: () current length.
+    """
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32) * scale
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(s) < cur_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def specs_attention(cfg: ModelConfig, tp: int) -> Params:
+    hd = cfg.head_dim
+    qo = _maybe(cfg.n_heads * hd, tp, "tp")
+    kvo = _maybe(cfg.n_kv_heads * hd, tp, "tp")
+    p = {
+        "wq": P("fsdp", qo), "wk": P("fsdp", kvo), "wv": P("fsdp", kvo),
+        "wo": P(qo, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p.update({"bq": P(qo), "bk": P(kvo), "bv": P(kvo)})
+    return p
+
+
+def attention_fwd(p: Params, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, *, cache: Optional[Params] = None,
+                  cur_len: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Optional[Params]]:
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = apply_linear(p["wq"], x, p.get("bq")).reshape(b, t, cfg.n_heads, hd)
+    k = apply_linear(p["wk"], x, p.get("bk")).reshape(b, t, cfg.n_kv_heads, hd)
+    v = apply_linear(p["wv"], x, p.get("bv")).reshape(b, t, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = full_attention(q, k, v, causal=cfg.causal)
+        new_cache = None
+    else:
+        kc = lax.dynamic_update_slice(cache["k"], k, (0, cur_len, 0, 0))
+        vc = lax.dynamic_update_slice(cache["v"], v, (0, cur_len, 0, 0))
+        out = decode_attention(q, kc, vc, cur_len + 1)
+        new_cache = {"k": kc, "v": vc}
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    return apply_linear(p["wo"], out), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def specs_attention_cache(cfg: ModelConfig, tp: int) -> Params:
+    # Prefer sharding KV heads over the model axis; when head count does not
+    # divide (GQA kv=8 on tp=16), shard the sequence axis instead so the
+    # 32k/500k caches still split 256 ways (DESIGN.md §5).
+    if tp and cfg.n_kv_heads % tp == 0:
+        spec = P("dp", None, "tp", None)
+    else:
+        spec = P("dp", "sp", None, None)
+    return {"k": spec, "v": spec}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    qk_hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["q_a"] = dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype)
+        p["q_norm"] = _norm_init(cfg.q_lora_rank, dtype)
+        p["q_b"] = dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_hd, dtype)
+    else:
+        p["q_b"] = dense_init(ks[1], cfg.d_model, cfg.n_heads * qk_hd, dtype)
+    p["kv_a"] = dense_init(ks[2], cfg.d_model,
+                           cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype)
+    p["kv_norm"] = _norm_init(cfg.kv_lora_rank, dtype)
+    p["k_b"] = dense_init(ks[3], cfg.kv_lora_rank,
+                          cfg.n_heads * cfg.qk_nope_head_dim, dtype)
+    p["v_b"] = dense_init(ks[4], cfg.kv_lora_rank,
+                          cfg.n_heads * cfg.v_head_dim, dtype)
+    p["wo"] = dense_init(ks[5], cfg.n_heads * cfg.v_head_dim, cfg.d_model, dtype)
+    return p
+
+
+def specs_mla(cfg: ModelConfig, tp: int) -> Params:
+    qk_hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["q_a"] = P("fsdp", None)
+        p["q_norm"] = P(None)
+        p["q_b"] = P(None, _maybe(cfg.n_heads * qk_hd, tp, "tp"))
+    else:
+        p["q_b"] = P("fsdp", _maybe(cfg.n_heads * qk_hd, tp, "tp"))
+    p["kv_a"] = P("fsdp", None)
+    p["kv_norm"] = P(None)
+    p["k_b"] = P(None, _maybe(cfg.n_heads * cfg.qk_nope_head_dim, tp, "tp"))
+    p["v_b"] = P(None, _maybe(cfg.n_heads * cfg.v_head_dim, tp, "tp"))
+    p["wo"] = P(_maybe(cfg.n_heads * cfg.v_head_dim, tp, "tp"), "fsdp")
+    return p
+
+
+def mla_fwd(p: Params, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *,
+            cache: Optional[Params] = None, cur_len: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[Params]]:
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    nope, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = (nope + rd) ** -0.5
+
+    if cfg.q_lora_rank:
+        q_c = rms_norm(apply_linear(p["q_a"], x), p["q_norm"], cfg.norm_eps)
+    else:
+        q_c = x
+    q = apply_linear(p["q_b"], q_c).reshape(b, t, h, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = apply_linear(p["kv_a"], x)
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(kv[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]                    # (B, T, rd)
+
+    if cache is None:
+        # Prefill: expand per-head keys/values, chunked attention.
+        k_nope = apply_linear(p["k_b"], c_kv).reshape(b, t, h, nope)
+        v = apply_linear(p["v_b"], c_kv).reshape(b, t, h, vd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, rd))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        out = full_attention(q_full, k, v, causal=cfg.causal, scale=scale)
+        new_cache = None
+    else:
+        # Decode: *absorbed* MLA — attend in the compressed latent space so
+        # the cache stays (B, S, kv_lora_rank + rope) and no per-head K/V is
+        # ever expanded (the memory win that makes 671B decode viable).
+        ckv_c = lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, cur_len, 0))
+        krope_c = lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, cur_len, 0))
+        w_kb = p["k_b"].reshape(cfg.kv_lora_rank, h, nope)
+        q_abs = jnp.einsum("bthd,lhd->bthl", q_nope.astype(jnp.float32),
+                           w_kb.astype(jnp.float32))
+        # logits over latent cache + rope part
+        logits = (jnp.einsum("bthl,bsl->bhts", q_abs, ckv_c.astype(jnp.float32))
+                  + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                               krope_c.astype(jnp.float32))) * scale
+        s = ckv_c.shape[1]
+        mask = jnp.arange(s) < (cur_len + 1)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhts,bsl->bthl", pattn, ckv_c.astype(jnp.float32))
+        w_vb = p["v_b"].reshape(cfg.kv_lora_rank, h, vd)
+        out = jnp.einsum("bthl,lhd->bthd", o_lat,
+                         w_vb.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c}
+    out = out.reshape(b, t, h * vd)
+    return apply_linear(p["wo"], out), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def specs_mla_cache(cfg: ModelConfig, tp: int) -> Params:
+    # Latent cache has no head axis; shard the sequence over the model axis.
+    return {"c_kv": P("dp", "sp", None), "k_rope": P("dp", "sp", None)}
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if act == "swiglu":
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def specs_mlp(d_ff: int, act: str, tp: int) -> Params:
+    f = _maybe(d_ff, tp, "tp")
+    p = {"up": P("fsdp", f), "down": P(f, "fsdp")}
+    if act == "swiglu":
+        p["gate"] = P("fsdp", f)
+    return p
+
+
+def mlp_fwd(p: Params, x: jax.Array, act: str) -> jax.Array:
+    up = apply_linear(p["up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(apply_linear(p["gate"], x)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return apply_linear(p["down"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE with gather-based (sort-free-FLOPs) dispatch
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    e = cfg.n_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, e, jnp.float32),
+        "w_gate": (jax.random.truncated_normal(ks[1], -2, 2, (e, cfg.d_model, dff), jnp.float32)
+                   * (1.0 / cfg.d_model) ** 0.5).astype(dtype),
+        "w_up": (jax.random.truncated_normal(ks[2], -2, 2, (e, cfg.d_model, dff), jnp.float32)
+                 * (1.0 / cfg.d_model) ** 0.5).astype(dtype),
+        "w_down": (jax.random.truncated_normal(ks[3], -2, 2, (e, dff, cfg.d_model), jnp.float32)
+                   * (1.0 / dff) ** 0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg.d_model,
+                               cfg.n_shared_experts * dff, "swiglu", dtype)
+    return p
+
+
+def specs_moe(cfg: ModelConfig, tp: int) -> Params:
+    e = _maybe(cfg.n_experts, tp, "tp")
+    dff = cfg.moe_d_ff or cfg.d_ff
+    p = {
+        "router": P("fsdp", None),
+        "w_gate": P(e, "fsdp", None),
+        "w_up": P(e, "fsdp", None),
+        "w_down": P(e, None, "fsdp"),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = specs_mlp(cfg.n_shared_experts * dff, "swiglu", tp)
+    return p
+
+
+def _moe_group(p: Params, xg: jax.Array, cfg: ModelConfig,
+               capacity: int) -> jax.Array:
+    """Route one group of tokens. xg: (G, D) -> (G, D).
+
+    Gather-based dispatch (DESIGN.md §4): index arrays are built with
+    sort/searchsorted (integer work, no matmul FLOPs), then tokens move via
+    two gathers — the SPMD analogue of the expert-parallel all-to-all, at
+    activation-volume cost instead of the O(T*E*C*D) one-hot einsum.
+    """
+    g, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("gd,de->ge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, k)                     # (G, K)
+    topw = (topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)).astype(jnp.float32)
+
+    flat_e = topi.reshape(-1)                            # (G*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos = jnp.arange(g * k) - start[sorted_e]
+    ok = pos < capacity
+    slot = jnp.where(ok, sorted_e * capacity + pos, e * capacity)  # overflow -> trash
+    tok = order // k
+    # token feeding each (expert, slot); sentinel g -> zero row
+    token_for_slot = jnp.full((e * capacity + 1,), g, jnp.int32).at[slot].set(
+        tok.astype(jnp.int32), mode="drop")
+    slot_for_tokk = jnp.full((g * k,), e * capacity, jnp.int32).at[order].set(
+        jnp.where(ok, slot, e * capacity).astype(jnp.int32))
+
+    def _c(arr, *names):
+        """§Perf fix (EXPERIMENTS.md, deepseek hillclimb): pin the expert axis
+        of every dispatch buffer to the tp axis so XLA routes tokens with an
+        expert-parallel all-to-all instead of full all-gathers."""
+        if not F.MOE_CONSTRAIN:
+            return arr
+        from repro.distributed.sharding import constrain
+        return constrain(arr, *names)
+
+    xpad = jnp.concatenate([xg, jnp.zeros((1, d), xg.dtype)], 0)
+    dispatched = xpad[token_for_slot[: e * capacity]].reshape(e, capacity, d)
+    dispatched = _c(dispatched, "tp", None, None)
+    hg = jnp.einsum("ecd,edf->ecf", dispatched, p["w_gate"],
+                    preferred_element_type=jnp.float32)
+    hu = jnp.einsum("ecd,edf->ecf", dispatched, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    hy = (jax.nn.silu(hg) * hu).astype(xg.dtype)
+    hy = _c(hy, "tp", None, None)
+    y = jnp.einsum("ecf,efd->ecd", hy, p["w_down"],
+                   preferred_element_type=jnp.float32).astype(xg.dtype)
+    y = _c(y, "tp", None, None)
+    ypad = jnp.concatenate([y.reshape(e * capacity, d),
+                            jnp.zeros((1, d), y.dtype)], 0)
+    per_k = ypad[slot_for_tokk].reshape(g, k, d)
+    per_k = _c(per_k, ("dp", "sp"), None, None)
+    out = jnp.einsum("gk,gkd->gd", topw, per_k.astype(jnp.float32)).astype(xg.dtype)
+    return out
+
+
+def moe_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+            group_size: Optional[int] = None,
+            capacity_factor: Optional[float] = None) -> jax.Array:
+    """x: (B, T, D).
+
+    Default: one group over all tokens (no loop; dispatch/combine are single
+    gathers, SPMD-sharded).  ``group_size`` bounds the transient working set
+    on small-memory runs; the group loop fully unrolls under flags.UNROLL.
+    """
+    if F.MOE_IMPL == "ep":
+        from repro.distributed.sharding import get_mesh, get_rules
+        mesh, rules = get_mesh(), get_rules() or {}
+        ax = rules.get("tp")
+        if (mesh is not None and ax in mesh.axis_names
+                and cfg.n_experts % mesh.shape[ax] == 0
+                and mesh.shape[ax] > 1):
+            from repro.models.moe_ep import moe_fwd_ep
+            return moe_fwd_ep(p, x, cfg)
+    if capacity_factor is None:
+        capacity_factor = F.MOE_CAPACITY
+    b, t, d = x.shape
+    flat = x.reshape(b * t, d)
+    if F.MOE_CONSTRAIN:
+        from repro.distributed.sharding import constrain
+        flat = constrain(flat, ("dp", "sp"), None)
+    n = flat.shape[0]
+    gsz = n if group_size is None else min(group_size, n)
+    if n % gsz:
+        gsz = n  # tiny/ragged inputs: single group
+    cap = int(gsz * cfg.top_k / cfg.n_experts * capacity_factor)
+    cap = max(8, ((cap + 7) // 8) * 8)
+    if gsz == n:
+        out = _moe_group(p, flat, cfg=cfg, capacity=cap)
+    else:
+        groups = flat.reshape(n // gsz, gsz, d)
+        _, out = lax.scan(
+            lambda _, g: (None, _moe_group(p, g, cfg=cfg, capacity=cap)),
+            None, groups, unroll=F.UNROLL)
+    out = out.reshape(b, t, d)
+    if cfg.n_shared_experts:
+        out = out + mlp_fwd(p["shared"], x, "swiglu")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state space duality, chunked matmul form)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * ns
+    return {
+        # order: [z (di), x (di), B (ns), C (ns), dt (nh)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.truncated_normal(
+            ks[1], -2, 2, (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": _norm_init(di, dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def specs_mamba2(cfg: ModelConfig, tp: int) -> Params:
+    nh = _maybe(cfg.n_ssm_heads, tp, "tp")
+    di = _maybe(cfg.d_inner, tp, "tp")
+    return {
+        "in_proj": P("fsdp", None),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "a_log": P(nh), "d_skip": P(nh), "dt_bias": P(nh),
+        "norm": P(di),
+        "out_proj": P(di, "fsdp"),
+    }
+
+
+def _ssd_scan(xh: jax.Array, dt: jax.Array, a_log: jax.Array, bmat: jax.Array,
+              cmat: jax.Array, chunk: int,
+              init_state: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: y_t = C_t . h_t,  h_t = exp(-exp(A)dt_t) h_{t-1} + dt_t B_t x_t.
+
+    xh: (B, T, nh, hd); dt: (B, T, nh); bmat/cmat: (B, T, ns).
+    Returns (y (B,T,nh,hd), final_state (B,nh,ns,hd)).
+    Intra-chunk work is attention-like matmuls (MXU-friendly); inter-chunk a
+    sequential scan over T/chunk steps carrying (B, nh, ns, hd).
+    """
+    b, t, nh, hd = xh.shape
+    ns = bmat.shape[-1]
+    q = min(chunk, t)
+    assert t % q == 0
+    nchunk = t // q
+    a = -jnp.exp(a_log)                                   # (nh,)
+    dta = dt * a[None, None, :]                           # (B, T, nh)
+    xdt = xh * dt[..., None]                              # dt-weighted input
+
+    def to_chunks(z):
+        return z.reshape((b, nchunk, q) + z.shape[2:]).transpose(1, 0, *range(2, z.ndim + 1))
+
+    xc = to_chunks(xdt)      # (nc, B, q, nh, hd)
+    dtac = to_chunks(dta)    # (nc, B, q, nh)
+    bc = to_chunks(bmat)     # (nc, B, q, ns)
+    cc = to_chunks(cmat)     # (nc, B, q, ns)
+
+    def step(h, inp):
+        xq, dq, bq, cq = inp
+        cs = jnp.cumsum(dq, axis=1)                       # (B, q, nh) cumulative log-decay
+        total = cs[:, -1]                                 # (B, nh)
+        # intra-chunk (causal "attention" with decay weights)
+        li = cs[:, :, None, :] - cs[:, None, :, :]        # (B, q, q, nh) decay i<-j
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: entries above the diagonal are positive and would
+        # overflow float32 for long chunks / fast-decaying heads.
+        li = jnp.where(mask[None, :, :, None], li, -jnp.inf)
+        w = jnp.exp(li)
+        scores = jnp.einsum("bqs,bks->bqk", cq, bq)       # (B, q, q)
+        y_intra = jnp.einsum("bqk,bqkh,bkhd->bqhd", scores, w, xq)
+        # contribution of incoming state
+        y_inter = jnp.einsum("bqs,bhsd,bqh->bqhd", cq, h, jnp.exp(cs))
+        # new state
+        decay_to_end = jnp.exp(total[:, None, :] - cs)    # (B, q, nh)
+        s_new = jnp.einsum("bqs,bqhd,bqh->bhsd", bq, xq, decay_to_end)
+        h_new = jnp.exp(total)[:, :, None, None] * h + s_new
+        return h_new, y_intra + y_inter
+
+    h0 = (init_state if init_state is not None
+          else jnp.zeros((b, nh, ns, hd), jnp.float32))
+    h_final, ys = lax.scan(step, h0.astype(jnp.float32),
+                           (xc.astype(jnp.float32), dtac.astype(jnp.float32),
+                            bc.astype(jnp.float32), cc.astype(jnp.float32)),
+                           unroll=F.UNROLL)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, nh, hd)
+    return y, h_final
+
+
+def mamba2_fwd(p: Params, x: jax.Array, cfg: ModelConfig, *,
+               state: Optional[Params] = None,
+               ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba2 block. state: {"ssm": (B,nh,ns,hd), "conv": (B,w-1,conv_dim)}."""
+    b, t, d = x.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+    zxbcdt = apply_linear(p["in_proj"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * ns]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ns:]
+
+    if state is None:
+        pad = jnp.zeros((b, w - 1, xbc.shape[-1]), xbc.dtype)
+        new_conv = xbc[:, t - (w - 1):, :] if t >= w - 1 else None
+    else:
+        pad = state["conv"]
+        new_conv = jnp.concatenate([pad, xbc], 1)[:, -(w - 1):, :]
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    # depthwise causal conv1d, window w
+    conv = sum(xbc_pad[:, i: i + t, :] * p["conv_w"][i][None, None]
+               for i in range(w)) + p["conv_b"][None, None]
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :di].reshape(b, t, nh, hd)
+    bmat = conv[..., di: di + ns]
+    cmat = conv[..., di + ns:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    if state is None:
+        y, h = _ssd_scan(xs, dt, p["a_log"], bmat, cmat, cfg.ssm_chunk)
+        new_state = None if new_conv is None else {"ssm": h, "conv": new_conv}
+    else:
+        # single-step recurrence (decode)
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0] * a[None])                  # (B, nh)
+        h_prev = state["ssm"].astype(jnp.float32)
+        upd = jnp.einsum("bs,bhd,bh->bhsd", bmat[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32), dt[:, 0])
+        h = da[:, :, None, None] * h_prev + upd
+        y = jnp.einsum("bs,bhsd->bhd", cmat[:, 0].astype(jnp.float32), h)[:, None]
+        new_state = {"ssm": h, "conv": new_conv}
+
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    return apply_linear(p["out_proj"], y), new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def specs_mamba2_state(cfg: ModelConfig, tp: int) -> Params:
+    nh = _maybe(cfg.n_ssm_heads, tp, "tp")
+    return {"ssm": P("dp", nh, None, None), "conv": P("dp", None, None)}

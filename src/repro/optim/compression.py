@@ -1,0 +1,50 @@
+"""Int8 error-feedback gradient compression for the cross-pod hop.
+
+At 2-pod scale the pod axis crosses DCN (much slower than ICI), so the
+cross-pod gradient all-reduce is the term worth compressing.  Scheme:
+
+  1. per-tensor symmetric int8 quantisation with an fp32 scale,
+  2. all-reduce the int8 payload (as int32 accumulate) over the pod axis,
+  3. dequantise; the quantisation residual is fed back into the next step's
+     gradient (error feedback keeps the scheme unbiased over time).
+
+Used inside ``shard_map`` over the "pod" axis by the train step when
+``compress_cross_pod=True``; the in-pod reduction stays full precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """-> (int8 payload, fp32 scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads: Any, axis_name: str) -> Any:
+    """Error-feedback-free single-shot compressed psum over ``axis_name``.
+
+    For each leaf: quantise, psum the int8 payload (accumulated in int32 so
+    the reduction cannot overflow), psum the scales, dequantise with the mean
+    scale.  Residual feedback is applied by the caller, which keeps the
+    residual buffer in the train state.
+    """
+    n = jax.lax.psum(1.0, axis_name)
+
+    def one(g):
+        q, scale = compress_int8(g)
+        qs = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        ss = jax.lax.psum(scale, axis_name) / n
+        return (qs.astype(jnp.float32) * ss / n).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

@@ -1,0 +1,42 @@
+"""Elastic scaling: re-shard a checkpoint onto a different mesh.
+
+Because checkpoints store *global* arrays per leaf (host shard files union to
+the full tensor) and shardings are derived from logical rules, moving between
+mesh shapes is: build new mesh -> resolve specs -> restore with placement.
+``plan_remesh`` decides the replacement mesh after losing nodes (drop the
+data-parallel extent first — gradient noise scale degrades gracefully;
+the model axis extent is load-bearing for memory).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def plan_remesh(n_alive: int, *, model: int = 16,
+                pod_axis: bool = False) -> Optional[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    """Largest (data, model) mesh fitting the surviving chips.
+
+    Keeps the model axis fixed (sharding of weights must still fit HBM) and
+    shrinks data parallelism to the largest power of two that fits.
+    Returns None if fewer than one model replica survives.
+    """
+    if n_alive < model:
+        return None
+    data = 1
+    while data * 2 * model <= n_alive:
+        data *= 2
+    if pod_axis and data >= 2:
+        return ((2, data // 2, model), ("pod", "data", "model"))
+    return ((data, model), ("data", "model"))
+
+
+def build_mesh(plan: Tuple[Tuple[int, ...], Tuple[str, ...]],
+               devices=None) -> Mesh:
+    shape, axes = plan
+    devs = devices if devices is not None else jax.devices()
+    need = int(np.prod(shape))
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axes)

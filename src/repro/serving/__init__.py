@@ -1,0 +1,3 @@
+from repro.serving.scheduler import (Request, ContinuousBatcher, ServeEngine)
+
+__all__ = ["Request", "ContinuousBatcher", "ServeEngine"]

@@ -1,0 +1,16 @@
+import os
+import sys
+
+import pytest
+
+# Tests run single-device (the dry-run alone forces 512 host devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _reset_model_flags():
+    yield
+    from repro.models import flags as F
+    F.REMAT, F.UNROLL, F.ATTN_CHUNK, F.MOE_CAPACITY = "none", False, 1024, 1.25

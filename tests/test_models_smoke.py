@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (deliverable f): reduced config of the same family,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgs
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.launch.steps import init_state, make_train_step
+
+ARCHS = cfgs.list_archs()
+
+
+def _batch(cfg, b=2, t=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (b, t), 0, cfg.vocab, jnp.int32)
+    labels = jnp.roll(toks, -1, axis=1)
+    if cfg.family in ("vlm", "encoder"):
+        emb = jax.random.normal(key, (b, t, cfg.d_model), jnp.bfloat16)
+        return {"embeds": emb, "labels": labels}
+    return {"tokens": toks, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = cfgs.get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    if "embeds" in batch:
+        logits, _ = jax.jit(lambda p, e: T.forward_embeds(p, e, cfg))(
+            params, batch["embeds"])
+    else:
+        logits, _ = jax.jit(lambda p, t: T.forward(p, t, cfg))(
+            params, batch["tokens"])
+    b, t = batch["labels"].shape
+    assert logits.shape == (b, t, cfg.vocab)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = cfgs.get_config(arch, smoke=True)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    state = init_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt_cfg, total_steps=10))
+    state, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    p0 = jax.tree.leaves(state["params"])[0]
+    assert not np.isnan(np.asarray(p0, np.float32)).any()
+    assert int(state["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if cfgs.REGISTRY[a].FAMILY != "encoder"])
+def test_smoke_decode_step(arch):
+    cfg = cfgs.get_config(arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    cache = T.init_cache(cfg, b, 32)
+    step = jax.jit(lambda p, t, c, l: T.decode_step(p, cfg, t, c, l))
+    key = jax.random.PRNGKey(1)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab, jnp.int32)
+    for i in range(3):
+        logits, cache = step(params, tok, cache, jnp.int32(i))
+        assert logits.shape == (b, cfg.vocab)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+def test_full_configs_match_assignment():
+    """Exact published sizes from the assignment brief."""
+    c = cfgs.get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (61, 7168, 128, 129280)
+    assert (c.n_experts, c.top_k, c.moe_d_ff) == (256, 8, 2048)
+    assert c.use_mla and c.mtp_depth == 1 and c.n_shared_experts == 1
+    c = cfgs.get_config("olmoe-1b-7b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == (16, 2048, 64, 8)
+    c = cfgs.get_config("jamba-1.5-large-398b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (72, 8192, 64, 8)
+    assert (c.n_experts, c.top_k, c.attn_period) == (16, 2, 8)
+    c = cfgs.get_config("qwen1.5-0.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        24, 1024, 16, 2816, 151936)
+    assert c.qkv_bias
+    c = cfgs.get_config("qwen1.5-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (40, 2560, 20, 6912)
+    c = cfgs.get_config("mistral-large-123b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        88, 12288, 96, 8, 28672, 32768)
+    c = cfgs.get_config("yi-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        48, 4096, 32, 4, 11008, 64000)
+    c = cfgs.get_config("hubert-xlarge")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        48, 1280, 16, 5120, 504)
+    assert not c.causal
+    c = cfgs.get_config("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab) == (64, 2560, 128, 50280)
+    assert c.n_heads == 0
+    c = cfgs.get_config("phi-3-vision-4.2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        32, 3072, 32, 8192, 32064)
+
+
+def test_param_counts_plausible():
+    """num_params() approximations land near the published sizes."""
+    expect = {
+        "deepseek-v3-671b": (6.0e11, 7.6e11),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "mistral-large-123b": (1.1e11, 1.35e11),
+        "yi-9b": (8.0e9, 1.0e10),
+        "qwen1.5-0.5b": (4.0e8, 7.5e8),
+        "mamba2-2.7b": (2.3e9, 3.2e9),
+        "phi-3-vision-4.2b": (3.5e9, 4.5e9),
+        "jamba-1.5-large-398b": (3.4e11, 4.4e11),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = cfgs.get_config(arch).num_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_below_total():
+    c = cfgs.get_config("deepseek-v3-671b")
+    assert c.active_params() < 0.1 * c.num_params()
+
+
+def test_stage_plans():
+    from repro.models.transformer import stage_plan
+    pre, period, n = stage_plan(cfgs.get_config("deepseek-v3-671b"))
+    assert len(pre) == 3 and len(period) == 1 and n == 58
+    pre, period, n = stage_plan(cfgs.get_config("jamba-1.5-large-398b"))
+    assert len(pre) == 0 and len(period) == 8 and n == 9
+    kinds = [d.kind for d in period]
+    assert kinds.count("attn") == 1 and kinds[7] == "attn"
+    assert sum(d.ffn == "moe" for d in period) == 4

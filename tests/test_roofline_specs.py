@@ -1,0 +1,106 @@
+"""Roofline HLO parsing + input-spec construction (no device allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as cfgs
+from repro.launch import roofline as rl
+from repro.launch import specs as S
+from repro.models.config import ModelConfig
+
+
+HLO_SAMPLE = """
+  %ag = bf16[16,2048]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%sum
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = (f32[4,32]{1,0}, f32[4,32]{1,0}) all-to-all(%a, %b)
+  %cp = bf16[256]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ard = f32[64]{0} all-reduce-done(%h)
+  %dot = f32[128,128]{1,0} dot(%l, %r)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = rl.collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 16 * 2048 * 2
+    assert out["all-reduce"] == 1024 * 4 + 64 * 4  # includes -done variant
+    assert out["reduce-scatter"] == 8 * 128 * 4
+    assert out["all-to-all"] == 2 * 4 * 32 * 4     # tuple result
+    assert out["collective-permute"] == 256 * 2
+
+
+def test_collective_bytes_ignores_compute():
+    out = rl.collective_bytes("%dot = f32[512,512]{1,0} dot(%a, %b)")
+    assert sum(out.values()) == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(arch="a", shape="s", mesh="m", flops=197e12,
+                    hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5,
+                    coll_breakdown={}, model_flops=98.5e12)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 2.0) < 1e-9
+    assert abs(r.t_collective - 0.5) < 1e-9
+    assert r.bottleneck == "memory"
+    assert abs(r.useful_ratio - 0.5) < 1e-9
+    # useful flops at the 2s bound vs peak
+    assert abs(r.roofline_fraction - (98.5e12 / 2.0) / 197e12) < 1e-9
+
+
+def test_model_flops_global():
+    cfg = cfgs.get_config("yi-9b")
+    tr = rl.model_flops_global(cfg, cfgs.SHAPE_BY_NAME["train_4k"])
+    pf = rl.model_flops_global(cfg, cfgs.SHAPE_BY_NAME["prefill_32k"])
+    dc = rl.model_flops_global(cfg, cfgs.SHAPE_BY_NAME["decode_32k"])
+    n = cfg.active_params()
+    assert abs(tr - 6 * n * 4096 * 256) / tr < 1e-9
+    assert abs(pf - 2 * n * 32768 * 32) / pf < 1e-9
+    assert abs(dc - 2 * n * 128) / dc < 1e-9
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "hubert-xlarge", "mamba2-2.7b"])
+@pytest.mark.parametrize("shape_name",
+                         ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_shapes(arch, shape_name):
+    cfg = cfgs.get_config(arch)
+    shapes = {s.name for s in cfgs.applicable_shapes(arch)}
+    if shape_name not in shapes:
+        pytest.skip("cell skipped by design")
+    shape = cfgs.SHAPE_BY_NAME[shape_name]
+    sds, parts = S.input_specs(cfg, shape, tp=16, dp=16)
+    if shape.kind == "train":
+        key = "embeds" if cfg.family in ("vlm", "encoder") else "tokens"
+        assert sds[key].shape[:2] == (shape.global_batch, shape.seq_len)
+        assert sds["labels"].shape == (shape.global_batch, shape.seq_len)
+    elif shape.kind == "decode":
+        assert sds["tokens"].shape == (shape.global_batch, 1)
+        # cache leaves exist and carry seq_len where applicable
+        leaves = jax.tree.leaves(sds["cache"])
+        assert leaves, "decode cell must have a cache"
+    # every spec tree leaf must be a PartitionSpec
+    for leaf in jax.tree.leaves(parts, is_leaf=lambda x: isinstance(x, P)):
+        assert isinstance(leaf, P)
+
+
+def test_long_500k_batch1_drops_dp():
+    cfg = cfgs.get_config("mamba2-2.7b")
+    shape = cfgs.SHAPE_BY_NAME["long_500k"]
+    _, parts = S.input_specs(cfg, shape, tp=16, dp=16)
+    for leaf in jax.tree.leaves(parts, is_leaf=lambda x: isinstance(x, P)):
+        assert "dp" not in tuple(leaf), leaf
+
+
+def test_skip_table_matches_design():
+    skips = dict()
+    for arch in cfgs.list_archs():
+        skips[arch] = {n for n, _ in cfgs.skipped_shapes(arch)}
+    assert skips["jamba-1.5-large-398b"] == set()
+    assert skips["mamba2-2.7b"] == set()
+    assert skips["hubert-xlarge"] == {"decode_32k", "long_500k"}
+    for dense_arch in ("yi-9b", "qwen1.5-0.5b", "mistral-large-123b",
+                      "deepseek-v3-671b", "phi-3-vision-4.2b"):
+        assert skips[dense_arch] == {"long_500k"}
+    total_cells = sum(len(cfgs.applicable_shapes(a)) for a in cfgs.list_archs())
+    assert total_cells == 31

@@ -1,0 +1,110 @@
+"""Format round-trips + CSR semantics (paper Fig. 4) + hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bcsr_from_dense, bcsr_to_dense, csr_arrays_from_dense,
+                        ell_from_dense, ell_from_dense_conv, ell_to_dense,
+                        magnitude_prune, block_prune, stretch_offsets)
+from repro.core.sparse_format import bcsr_stack_from_dense
+
+
+def _pruned(rng, shape, sparsity=0.8):
+    w = rng.standard_normal(shape).astype(np.float32)
+    return np.asarray(magnitude_prune(jnp.asarray(w), sparsity))
+
+
+def test_csr_matches_paper_example():
+    # Fig. 4 of the paper.
+    m = np.array([
+        [10, 20, 0, 0, 0, 0],
+        [0, 30, 0, 40, 0, 0],
+        [0, 0, 50, 60, 70, 0],
+        [0, 0, 0, 0, 0, 80],
+    ], dtype=np.float32)
+    value, colidx, rowptr = csr_arrays_from_dense(m)
+    np.testing.assert_array_equal(value, [10, 20, 30, 40, 50, 60, 70, 80])
+    np.testing.assert_array_equal(rowptr, [0, 2, 4, 7, 8])
+    np.testing.assert_array_equal(colidx, [0, 1, 1, 3, 2, 3, 4, 5])
+
+
+def test_ell_roundtrip():
+    rng = np.random.default_rng(0)
+    w = _pruned(rng, (37, 53))
+    np.testing.assert_allclose(np.asarray(ell_to_dense(ell_from_dense(w))), w)
+
+
+def test_bcsr_roundtrip():
+    rng = np.random.default_rng(1)
+    w = np.asarray(block_prune(
+        jnp.asarray(rng.standard_normal((130, 70)).astype(np.float32)),
+        0.6, (16, 8)))
+    np.testing.assert_allclose(
+        np.asarray(bcsr_to_dense(bcsr_from_dense(w, (16, 8)))), w)
+
+
+def test_bcsr_stack_roundtrip():
+    rng = np.random.default_rng(2)
+    ws = np.stack([
+        np.asarray(block_prune(
+            jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32)),
+            s, (16, 16)))
+        for s in (0.2, 0.8)])  # different nnz per layer -> padding path
+    stacked = bcsr_stack_from_dense(ws, (16, 16))
+    import jax
+    for i in range(2):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        np.testing.assert_allclose(np.asarray(bcsr_to_dense(layer)), ws[i])
+
+
+def test_weight_stretching_formula():
+    # off = (c*Hp + r)*Wp + s  — the paper's layout function f.
+    rng = np.random.default_rng(3)
+    w = _pruned(rng, (4, 3, 3, 3), 0.5)
+    ell = stretch_offsets(ell_from_dense_conv(w), hp=10, wp=7)
+    off = np.asarray(ell.offset)
+    c, r, s = np.asarray(ell.cidx), np.asarray(ell.ridx), np.asarray(ell.sidx)
+    np.testing.assert_array_equal(off, (c * 10 + r) * 7 + s)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 40),
+       st.floats(0.0, 0.95), st.integers(0, 1000))
+def test_ell_roundtrip_property(m, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = _pruned(rng, (m, n), sparsity)
+    np.testing.assert_allclose(np.asarray(ell_to_dense(ell_from_dense(w))), w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 1000))
+def test_bcsr_roundtrip_property(gm, gn, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((gm * 8 + 3, gn * 8 + 5)).astype(np.float32)
+    w[rng.random(w.shape) < 0.7] = 0.0
+    np.testing.assert_allclose(
+        np.asarray(bcsr_to_dense(bcsr_from_dense(w, (8, 8)))), w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.95), st.integers(0, 1000))
+def test_magnitude_prune_achieves_sparsity(sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    p = np.asarray(magnitude_prune(jnp.asarray(w), sparsity))
+    achieved = (p == 0).mean()
+    assert abs(achieved - sparsity) < 0.05
+    # surviving entries are untouched
+    np.testing.assert_array_equal(p[p != 0], w[p != 0])
+
+
+def test_block_prune_keeps_dense_tiles():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((64, 64)).astype(np.float32) + 0.5
+    p = np.asarray(block_prune(jnp.asarray(w), 0.5, (16, 16)))
+    tiles = p.reshape(4, 16, 4, 16).transpose(0, 2, 1, 3)
+    for i in range(4):
+        for j in range(4):
+            t = tiles[i, j]
+            assert (t == 0).all() or (t != 0).all()

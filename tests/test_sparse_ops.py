@@ -1,0 +1,112 @@
+"""Direct sparse conv + sparse linear vs dense oracles (pure-JAX layer)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bcsr_from_dense, bcsr_matmul, block_prune, dense_conv,
+                        dense_matmul, direct_sparse_conv, ell_from_dense,
+                        ell_from_dense_conv, ell_matmul, im2col,
+                        lowered_dense_conv, lowered_sparse_conv,
+                        magnitude_prune)
+
+
+def _conv_case(rng, n, c, h, w, m, r, sparsity, dtype=np.float32):
+    x = rng.standard_normal((n, c, h, w)).astype(dtype)
+    wt = rng.standard_normal((m, c, r, r)).astype(np.float32)
+    wt = np.asarray(magnitude_prune(jnp.asarray(wt), sparsity)).astype(dtype)
+    return jnp.asarray(x), wt
+
+
+CONV_CASES = [
+    # (N, C, H, W, M, R, stride, pad, sparsity)
+    (2, 3, 12, 12, 8, 3, 1, 0, 0.7),
+    (1, 8, 9, 9, 16, 3, 1, 1, 0.9),
+    (2, 4, 16, 16, 8, 5, 1, 2, 0.8),
+    (2, 4, 17, 17, 8, 3, 2, 1, 0.8),   # stride 2, odd size
+    (1, 2, 23, 23, 4, 11, 4, 0, 0.6),  # alexnet-conv1-like
+    (3, 16, 8, 8, 32, 1, 1, 0, 0.85),  # 1x1 conv
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES)
+def test_direct_sparse_conv_matches_dense(case):
+    n, c, h, w, m, r, stride, pad, sp = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    x, wt = _conv_case(rng, n, c, h, w, m, r, sp)
+    ref = dense_conv(x, jnp.asarray(wt), stride=stride, padding=pad)
+    got = direct_sparse_conv(x, ell_from_dense_conv(wt), stride=stride,
+                             padding=pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("case", CONV_CASES[:4])
+def test_lowering_baselines_match_dense(case):
+    n, c, h, w, m, r, stride, pad, sp = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    x, wt = _conv_case(rng, n, c, h, w, m, r, sp)
+    ref = dense_conv(x, jnp.asarray(wt), stride=stride, padding=pad)
+    low = lowered_dense_conv(x, jnp.asarray(wt), stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(low), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+    ell2d = ell_from_dense(wt.reshape(m, -1))
+    lsp = lowered_sparse_conv(x, ell2d, r, r, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(lsp), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_im2col_duplication_factor():
+    """The lowering method's bandwidth waste the paper fixes: the lowered
+    matrix holds ~R*S copies of each input element."""
+    x = jnp.ones((1, 2, 8, 8))
+    cols = im2col(x, 3, 3, padding=1)
+    assert cols.size == 8 * 8 * 2 * 9  # E*F x C*R*S duplication
+
+
+def test_direct_conv_bf16():
+    rng = np.random.default_rng(0)
+    x, wt = _conv_case(rng, 2, 4, 10, 10, 8, 3, 0.8)
+    xb = x.astype(jnp.bfloat16)
+    ref = dense_conv(xb, jnp.asarray(wt).astype(jnp.bfloat16), padding=1)
+    got = direct_sparse_conv(xb, ell_from_dense_conv(wt.astype(jnp.bfloat16)),
+                             padding=1)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("mn", [(16, 32), (128, 96), (200, 200), (8, 8)])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.95])
+def test_ell_matmul(mn, sparsity):
+    m, n = mn
+    rng = np.random.default_rng(m * n)
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    w = np.asarray(magnitude_prune(jnp.asarray(w), sparsity))
+    x = jnp.asarray(rng.standard_normal((3, 5, n)).astype(np.float32))
+    ref = dense_matmul(x, jnp.asarray(w))
+    got = ell_matmul(x, ell_from_dense(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("block", [(8, 8), (16, 32), (32, 16)])
+@pytest.mark.parametrize("sparsity", [0.3, 0.8])
+def test_bcsr_matmul(block, sparsity):
+    rng = np.random.default_rng(block[0] * 100 + block[1])
+    w = rng.standard_normal((96, 160)).astype(np.float32)
+    w = np.asarray(block_prune(jnp.asarray(w), sparsity, block))
+    x = jnp.asarray(rng.standard_normal((7, 160)).astype(np.float32))
+    ref = dense_matmul(x, jnp.asarray(w))
+    got = bcsr_matmul(x, bcsr_from_dense(w, block))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_all_zero_weight():
+    """Fully pruned filter bank: output must be exactly zero (padding rows
+    are inert)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((1, 2, 6, 6)),
+                    dtype=jnp.float32)
+    wt = np.zeros((4, 2, 3, 3), np.float32)
+    out = direct_sparse_conv(x, ell_from_dense_conv(wt))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
