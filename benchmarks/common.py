@@ -1,23 +1,11 @@
-"""Benchmark timing helpers (CPU wall-time; TPU numbers come from §Roofline)."""
+"""Benchmark timing helpers (CPU wall-time; TPU numbers come from §Roofline).
+
+The timer itself lives in ``repro.tuning.measure`` — the autotuner and the
+benchmark suites share one warmup/median-of-k implementation.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable
-
-import jax
-
-
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (seconds) of a jitted call."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+from repro.tuning.measure import time_fn  # noqa: F401  (re-export)
 
 
 def row(name: str, seconds: float, derived: str = "") -> str:

@@ -27,7 +27,7 @@ from repro.models import cnn
 SCALES = {"alexnet": (99, 4), "googlenet": (96, 2), "resnet50": (96, 2)}
 
 
-def bench_model(name: str, *, iters: int = 3) -> List[str]:
+def bench_model(name: str, *, iters: int = 3, autotune: bool = False) -> List[str]:
     image, batch = SCALES[name]
     net = cnn.NETWORKS[name]()
     rng = np.random.default_rng(0)
@@ -81,11 +81,21 @@ def bench_model(name: str, *, iters: int = 3) -> List[str]:
             f"fig8/{name}/{m}", t,
             f"speedup_vs_dense={base / t:.2f};"
             f"tpu_projected_speedup={proj['dense'] / proj[m]:.2f}"))
+    if autotune:
+        # Measurement-driven per-layer method selection (repro.tuning): the
+        # tuned total is the sum of each sparse layer's winning wall time.
+        from repro.tuning import PlanCache, plan_network
+        plan = plan_network(net, 3, image, batch=batch, mode="wall",
+                            cache=PlanCache(), params=params, iters=iters)
+        t_auto = sum(plan[layer.name].est_s for layer, _ in shapes
+                     if layer.sparsity > 0)
+        out.append(row(f"fig8/{name}/auto", t_auto,
+                       f"speedup_vs_dense={base / t_auto:.2f}"))
     return out
 
 
-def run() -> List[str]:
+def run(autotune: bool = False) -> List[str]:
     lines = []
     for name in SCALES:
-        lines += bench_model(name)
+        lines += bench_model(name, autotune=autotune)
     return lines

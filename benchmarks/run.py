@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run fig8 fig11 # subset
+  PYTHONPATH=src python -m benchmarks.run                  # everything
+  PYTHONPATH=src python -m benchmarks.run fig8 fig11       # subset
+  PYTHONPATH=src python -m benchmarks.run fig8 --autotune  # + tuned row
 """
 from __future__ import annotations
 
@@ -12,16 +13,20 @@ import sys
 
 def main() -> None:
     from benchmarks import (fig8_sparse_conv, fig9_breakdown, fig10_locality,
-                            fig11_end2end, kernels, roofline_table)
+                            fig11_end2end, fig12_autotune, kernels,
+                            roofline_table)
+    argv = sys.argv[1:]
+    autotune = "--autotune" in argv
     suites = {
-        "fig8": fig8_sparse_conv.run,
+        "fig8": lambda: fig8_sparse_conv.run(autotune=autotune),
         "fig9": fig9_breakdown.run,
         "fig10": fig10_locality.run,
         "fig11": fig11_end2end.run,
+        "fig12": fig12_autotune.run,
         "kernels": kernels.run,
         "roofline": roofline_table.run,
     }
-    wanted = sys.argv[1:] or list(suites)
+    wanted = [a for a in argv if not a.startswith("--")] or list(suites)
     print("name,us_per_call,derived")
     for key in wanted:
         for line in suites[key]():

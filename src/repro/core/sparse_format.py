@@ -78,9 +78,14 @@ def ell_from_dense_conv(w, pad_to: int = 8) -> EllConv:
 
     ``pad_to`` rounds K up so jit specialisations are shared across layers with
     similar density (the paper's 'kernel customization' table keys on this).
+    K is clamped to ``K >= pad_to >= 1`` even for a fully-pruned (all-zero)
+    filter bank, so the Pallas path never sees zero-width value arrays.
     """
     w = np.asarray(w)
     m, c, r, s = w.shape
+    if m == 0:
+        raise ValueError("ell_from_dense_conv needs at least one output channel")
+    pad_to = max(1, int(pad_to))
     rows_val, rows_c, rows_r, rows_s, nnz = [], [], [], [], []
     for i in range(m):
         ci, ri, si = np.nonzero(w[i])
@@ -90,7 +95,7 @@ def ell_from_dense_conv(w, pad_to: int = 8) -> EllConv:
         rows_s.append(si)
         nnz.append(len(ci))
     k = max(1, max(nnz))
-    k = ((k + pad_to - 1) // pad_to) * pad_to
+    k = max(pad_to, ((k + pad_to - 1) // pad_to) * pad_to)
     val = np.zeros((m, k), dtype=w.dtype)
     cid = np.zeros((m, k), dtype=np.int32)
     rid = np.zeros((m, k), dtype=np.int32)
@@ -151,9 +156,12 @@ def ell_from_dense(w, pad_to: int = 8) -> EllMatrix:
     if w.ndim != 2:
         raise ValueError(f"ell_from_dense expects 2-D, got {w.shape}")
     m, n = w.shape
+    if m == 0:
+        raise ValueError("ell_from_dense needs at least one row")
+    pad_to = max(1, int(pad_to))
     nnz = (w != 0).sum(axis=1)
     k = max(1, int(nnz.max()))
-    k = ((k + pad_to - 1) // pad_to) * pad_to
+    k = max(pad_to, ((k + pad_to - 1) // pad_to) * pad_to)
     val = np.zeros((m, k), dtype=w.dtype)
     col = np.zeros((m, k), dtype=np.int32)
     for i in range(m):

@@ -6,7 +6,7 @@ pure-JAX direct path, and dtype policy (bf16/f32 in, f32 accumulate).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,24 +22,42 @@ _VMEM_BUDGET = 12 * 1024 * 1024
 # SMEM budget for the scalar-prefetched packed index array.
 _SMEM_BUDGET = 2 * 1024 * 1024
 
+# Public aliases consumed by repro.tuning (candidate-space pruning).
+VMEM_BUDGET = _VMEM_BUDGET
+SMEM_BUDGET = _SMEM_BUDGET
 
-def choose_tm(m: int, c: int, hp: int, wp: int, e: int, f: int, k: int) -> int:
-    """Pick the largest output-channel tile whose VMEM working set fits.
+_TM_LADDER = (128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
+                  k: int) -> List[int]:
+    """All output-channel tiles that divide M and fit the VMEM budget,
+    largest first.
 
     Working set per grid cell = input block + value block + f32 out block.
-    Mirrors the paper's per-layer kernel specialisation: small, few-channel
-    layers get a big TM (amortise the input stage-in); huge feature maps get
-    TM=1.
+    This is the search space the ``repro.tuning`` autotuner measures over;
+    ``choose_tm`` below is its static heuristic seed (largest feasible tile).
     """
     x_bytes = c * hp * wp * 4
-    for tm in (128, 64, 32, 16, 8, 4, 2, 1):
+    out: List[int] = []
+    for tm in _TM_LADDER:
         if m % tm:
             continue
         val_bytes = tm * k * 4
         out_bytes = tm * e * f * 4
         if x_bytes + val_bytes + out_bytes <= _VMEM_BUDGET:
-            return tm
-    return 1
+            out.append(tm)
+    return out or [1]
+
+
+def choose_tm(m: int, c: int, hp: int, wp: int, e: int, f: int, k: int) -> int:
+    """Pick the largest output-channel tile whose VMEM working set fits.
+
+    Mirrors the paper's per-layer kernel specialisation: small, few-channel
+    layers get a big TM (amortise the input stage-in); huge feature maps get
+    TM=1.  The measurement-driven refinement lives in ``repro.tuning``.
+    """
+    return tm_candidates(m, c, hp, wp, e, f, k)[0]
 
 
 def pack_indices(ell: EllConv) -> jax.Array:

@@ -5,10 +5,19 @@ through the Escoin BCSR path (the paper's technique as a serving feature).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --sparsity 0.8
+
+With --autotune, the kernel-customization autotuner (repro.tuning) plans a
+CNN workload instead: per-layer method/tile selection, persisted to a JSON
+plan cache, verified by a reload round-trip and an auto-vs-dense numeric
+check on a reduced layer slice.
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --autotune \
+      [--cnn alexnet] [--plan-cache plans/autotune_cache.json]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -52,16 +61,84 @@ def sparsify_params(params, cfg, sparsity: float, block=(16, 16), min_dim=64):
     return visit(params)
 
 
+def autotune_main(args) -> None:
+    """CNN autotune flow: plan -> persist -> reload round-trip -> numeric check."""
+    from repro.models import cnn
+    from repro.tuning import PlanCache, apply_plan_to_params, format_plan, plan_network
+
+    name = args.cnn
+    net = cnn.NETWORKS[name]()
+    image = ({"alexnet": 99, "googlenet": 96, "resnet50": 96}[name]
+             if args.smoke else 224)
+    mode = args.tune_mode
+    params = None
+    rng = np.random.default_rng(args.seed)
+    if mode == "wall":
+        params = cnn.init_cnn(net, 3, rng, image)
+
+    cache = PlanCache(args.plan_cache)
+    plan = plan_network(net, 3, image, batch=1, mode=mode,
+                        cache=cache, params=params)
+    print(f"tuned {name} @ {image}px: {len(plan)} conv layers, "
+          f"{len(cache)} cache entries -> {args.plan_cache}")
+    print(format_plan(plan))
+
+    # Round-trip: a fresh cache loaded from disk must reproduce the plan
+    # without re-tuning (every layer a hit).
+    replan = plan_network(net, 3, image, batch=1, mode=mode,
+                          cache=PlanCache(args.plan_cache), params=params)
+    assert replan == plan, "plan cache reload did not reproduce the plan"
+    print(f"plan cache round-trip ok ({args.plan_cache})")
+
+    # Numeric check: auto dispatch vs the dense oracle on a reduced-channel
+    # slice of the network — the first dense-kept conv plus the first two
+    # sparse convs (interpret-mode Pallas stays tractable on CPU).
+    convs = [l for l, _ in cnn.conv_layer_shapes(net, 3, image)]
+    picked = ([next(l for l in convs if l.sparsity == 0)]
+              + [l for l in convs if l.sparsity > 0][:2])
+    slice_net = []
+    for l in picked:
+        slice_net.append(dataclasses.replace(
+            l, out_c=max(8, min(32, l.out_c // 8)), stride=1))
+        slice_net.append(cnn.Relu())
+    sparams = cnn.init_cnn(slice_net, 3, rng, 12)
+    x = jnp.asarray(rng.standard_normal((1, 3, 12, 12)).astype(np.float32))
+    # Fresh in-memory cache: the synthetic slice geometries must not be
+    # persisted into the deployment plan cache.
+    splan = plan_network(slice_net, 3, 12, batch=1, mode="roofline",
+                         cache=PlanCache())
+    apply_plan_to_params(sparams, splan)
+    y_auto = cnn.cnn_forward(slice_net, sparams, x, method="auto", plan=splan)
+    y_dense = cnn.cnn_forward(slice_net, sparams, x, method="dense")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    methods = sorted({pe.method for pe in splan.values()})
+    print(f"auto-vs-dense slice check ok (slice methods: {', '.join(methods)})")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sparsity", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the kernel-customization autotuner (CNN path)")
+    ap.add_argument("--cnn", default="alexnet",
+                    choices=("alexnet", "googlenet", "resnet50"))
+    ap.add_argument("--plan-cache", default="plans/autotune_cache.json")
+    ap.add_argument("--tune-mode", default="roofline",
+                    choices=("roofline", "wall"))
     args = ap.parse_args()
+
+    if args.autotune:
+        autotune_main(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --autotune is given")
 
     cfg = cfgs.get_config(args.arch, smoke=args.smoke)
     if cfg.family == "encoder":

@@ -7,6 +7,8 @@ selectable method (paper Table/Figs 8-11):
   "lowered"    -- im2col + ELL(CSR) SpMM                  (CUSPARSE analogue)
   "csr-direct" -- Escoin direct sparse conv, pure-JAX scan
   "pallas"     -- Escoin direct sparse conv, Pallas kernel (interpret on CPU)
+  "auto"       -- per-layer dispatch through a tuned plan from repro.tuning
+                  (the paper's kernel customization, measurement-driven)
 
 Per-layer sparsities default to the Deep-Compression-era profile the paper's
 SkimCaffe models carry (first conv kept dense — pruning conv1 hurts accuracy,
@@ -27,7 +29,7 @@ from repro.core.pruning import magnitude_prune
 from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
 from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
 
-CONV_METHODS = ("dense", "lowered", "csr-direct", "pallas")
+CONV_METHODS = ("dense", "lowered", "csr-direct", "pallas", "auto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,18 +201,29 @@ def init_cnn(net: Sequence[Any], in_c: int, rng: np.random.Generator,
     return params
 
 
-def _conv_apply(l: Conv, entry: Dict[str, Any], x: jax.Array,
-                method: str) -> jax.Array:
+def _conv_apply(l: Conv, entry: Dict[str, Any], x: jax.Array, method: str,
+                plan: Optional[Dict[str, Any]] = None) -> jax.Array:
+    tm = None
+    if method == "auto":
+        # Per-layer kernel customization: the tuned plan names the method
+        # (and tm / pad_to) for this layer; missing entries fall back dense.
+        pe = (plan or {}).get(l.name)
+        method = pe.method if pe is not None else "dense"
+        tm = pe.tm if pe is not None else None
+        ell = entry.get("ell_auto", entry.get("ell"))
+        ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
+    else:
+        ell, ell2d = entry.get("ell"), entry.get("ell2d")
     if l.sparsity == 0 or method == "dense":
         y = dense_conv(x, entry["w"], stride=l.stride, padding=l.pad)
     elif method == "lowered":
-        y = lowered_sparse_conv(x, entry["ell2d"], l.k, l.k,
+        y = lowered_sparse_conv(x, ell2d, l.k, l.k,
                                 stride=l.stride, padding=l.pad)
     elif method == "csr-direct":
-        y = direct_sparse_conv(x, entry["ell"], stride=l.stride, padding=l.pad)
+        y = direct_sparse_conv(x, ell, stride=l.stride, padding=l.pad)
     elif method == "pallas":
-        y = pallas_sparse_conv(x, entry["ell"], stride=l.stride,
-                               padding=l.pad, interpret=True)
+        y = pallas_sparse_conv(x, ell, stride=l.stride,
+                               padding=l.pad, tm=tm, interpret=True)
     else:
         raise ValueError(method)
     return y + entry["b"][None, :, None, None]
@@ -230,14 +243,24 @@ def _pool(l: Pool, x: jax.Array) -> jax.Array:
 
 
 def cnn_forward(net: Sequence[Any], params: Dict[str, Any], x: jax.Array,
-                method: str = "dense") -> jax.Array:
-    """Run the whole network; FC layers run dense (paper measures CONV)."""
+                method: str = "dense",
+                plan: Optional[Dict[str, Any]] = None) -> jax.Array:
+    """Run the whole network; FC layers run dense (paper measures CONV).
+
+    ``method="auto"`` dispatches each conv through its tuned plan entry
+    (``repro.tuning``).  With no plan supplied, a roofline-mode plan is
+    computed on the fly from the input geometry (no measurement needed).
+    """
+    if method == "auto" and plan is None:
+        from repro.tuning.planner import plan_network  # lazy: avoids cycle
+        plan = plan_network(net, int(x.shape[1]), int(x.shape[2]),
+                            batch=int(x.shape[0]), mode="roofline")
     fc_rng = np.random.default_rng(int(params["_fc_rng"]))
 
     def walk(layers, x):
         for l in layers:
             if isinstance(l, Conv):
-                x = _conv_apply(l, params[l.name], x, method)
+                x = _conv_apply(l, params[l.name], x, method, plan)
             elif isinstance(l, Relu):
                 x = jax.nn.relu(x)
             elif isinstance(l, Pool):
@@ -246,7 +269,7 @@ def cnn_forward(net: Sequence[Any], params: Dict[str, Any], x: jax.Array,
                 x = jnp.concatenate([walk(br, x) for br in l.branches], axis=1)
             elif isinstance(l, Residual):
                 y = walk(l.body, x)
-                sc = (_conv_apply(l.proj, params[l.proj.name], x, method)
+                sc = (_conv_apply(l.proj, params[l.proj.name], x, method, plan)
                       if l.proj is not None else x)
                 x = y + sc
             elif isinstance(l, FC):

@@ -1,0 +1,25 @@
+"""Kernel-customization autotuner (paper §3.3-3.4 as a subsystem).
+
+Per-layer method/tile selection, measurement-driven with an analytical
+roofline fallback, persisted to a JSON plan cache:
+
+  space    -- candidate enumeration (method x tm x pad_to) from geometry
+  measure  -- wall-clock timing + roofline scoring of candidates
+  cache    -- versioned JSON plan cache keyed on geometry/sparsity/dtype/backend
+  planner  -- network walker producing executable {layer: PlanEntry} plans
+"""
+from repro.tuning.cache import PlanCache, PlanEntry, layer_key, sparsity_bucket
+from repro.tuning.measure import (measurable, measure_candidate,
+                                  roofline_estimate, time_fn)
+from repro.tuning.planner import (apply_plan_to_params, format_plan,
+                                  geometry_for, plan_layer, plan_network)
+from repro.tuning.space import (Candidate, ConvGeometry, enumerate_candidates,
+                                METHODS, PAD_TO_BUCKETS, pallas_feasible)
+
+__all__ = [
+    "Candidate", "ConvGeometry", "METHODS", "PAD_TO_BUCKETS", "PlanCache",
+    "PlanEntry", "apply_plan_to_params", "enumerate_candidates", "format_plan",
+    "geometry_for", "layer_key", "measurable", "measure_candidate",
+    "pallas_feasible", "plan_layer", "plan_network", "roofline_estimate",
+    "sparsity_bucket", "time_fn",
+]

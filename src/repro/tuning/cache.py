@@ -1,0 +1,110 @@
+"""Persistent plan cache: tune once per deployment, reload forever.
+
+A plan cache is a small versioned JSON document mapping a *layer key* to the
+winning :class:`PlanEntry`.  Keys capture everything the decision depends on —
+layer geometry, a bucketed sparsity (so near-equal densities share plans,
+like the paper's kernel-customization table), dtype, and backend — and
+nothing it doesn't (layer names, model names), so identical layers across
+models share one entry.
+
+Format (``docs/autotuning.md`` documents it for humans):
+
+    {"version": 1,
+     "entries": {"<key>": {"method": "pallas", "tm": 64, "pad_to": 8,
+                           "est_s": 1.2e-4, "source": "roofline"}}}
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from repro.tuning.space import Candidate, ConvGeometry
+
+CACHE_VERSION = 1
+
+# Sparsity bucket width for cache keys: layers within 5% density share plans.
+SPARSITY_BUCKET = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """The winning customization for one layer key."""
+
+    method: str
+    tm: Optional[int] = None
+    pad_to: Optional[int] = None
+    est_s: float = 0.0
+    source: str = "heuristic"     # measured | roofline | heuristic
+
+    @property
+    def candidate(self) -> Candidate:
+        return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to)
+
+    def to_dict(self) -> dict:
+        return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
+                "est_s": self.est_s, "source": self.source}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanEntry":
+        return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
+                   est_s=float(d.get("est_s", 0.0)),
+                   source=d.get("source", "heuristic"))
+
+
+def sparsity_bucket(sparsity: float) -> float:
+    return round(round(sparsity / SPARSITY_BUCKET) * SPARSITY_BUCKET, 2)
+
+
+def layer_key(g: ConvGeometry, backend: str) -> str:
+    """Cache key: geometry x sparsity bucket x dtype x backend."""
+    return (f"m{g.m}_c{g.c}_h{g.h}w{g.w}_r{g.r}s{g.s}_st{g.stride}"
+            f"_p{g.pad}_n{g.batch}_sp{sparsity_bucket(g.sparsity)}"
+            f"_{g.dtype}_{backend}")
+
+
+class PlanCache:
+    """In-memory plan table with JSON load/save."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.entries: Dict[str, PlanEntry] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def get(self, key: str) -> Optional[PlanEntry]:
+        return self.entries.get(key)
+
+    def put(self, key: str, entry: PlanEntry) -> None:
+        self.entries[key] = entry
+
+    def load(self, path: Optional[str] = None) -> "PlanCache":
+        path = path or self.path
+        with open(path) as fh:
+            doc = json.load(fh)
+        if doc.get("version") != CACHE_VERSION:
+            raise ValueError(
+                f"plan cache {path} has version {doc.get('version')!r}, "
+                f"expected {CACHE_VERSION}")
+        self.entries = {k: PlanEntry.from_dict(v)
+                        for k, v in doc.get("entries", {}).items()}
+        return self
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("no cache path given")
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        doc = {"version": CACHE_VERSION,
+               "entries": {k: e.to_dict() for k, e in sorted(self.entries.items())}}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+
+    def __len__(self) -> int:
+        return len(self.entries)

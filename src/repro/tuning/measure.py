@@ -1,0 +1,139 @@
+"""Candidate scoring: wall-clock measurement with an analytical fallback.
+
+Two scoring modes, both returning seconds (lower is better):
+
+  ``mode="wall"``     -- jit + warmup + median-of-k wall time (the canonical
+                         timer; ``benchmarks/common.py`` re-exports it).  The
+                         Pallas kernel is only wall-timed on a real TPU
+                         backend — in interpret mode its Python-executed time
+                         is meaningless, so it is excluded from measurement.
+  ``mode="roofline"`` -- analytic max(compute, memory) bound reusing the
+                         constants of ``launch/roofline.py``.  Used in CI /
+                         interpret mode and whenever measurement is disabled;
+                         also how pallas-vs-rest is ranked on CPU.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.direct_conv import dense_conv, direct_sparse_conv
+from repro.core.lowering import lowered_sparse_conv
+from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.kernels.sparse_conv.ops import sparse_conv
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.tuning.space import Candidate, ConvGeometry
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (seconds) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+# ---------------------------------------------------------------------------
+# analytic roofline scoring
+# ---------------------------------------------------------------------------
+
+def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
+    """max(compute, memory) time bound for one candidate, in seconds.
+
+    Mirrors the per-method byte/flop accounting of fig8's TPU projection:
+
+      dense       streams input + output + dense weights; full dense flops.
+      lowered     materialises the duplicated im2col matrix twice (write +
+                  read) — the bandwidth waste the paper's direct method
+                  removes; sparse flops over the padded ELL rows.
+      csr-direct  streams input + output + ELL (value, packed idx); the scan
+                  covers all K padded slots, so padded K costs flops.
+      pallas      same traffic, but the input block is staged HBM->VMEM once
+                  per (image, channel-tile) grid cell: larger tm amortises
+                  the stage-in (the tuner's main tm signal), while the nnz
+                  loop bound skips padding, so padded K costs no flops.
+    """
+    n, m, c = g.batch, g.m, g.c
+    rs = g.r * g.s
+    e, f = g.e, g.f
+    itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    din = float(n * c * g.hp * g.wp * itemsize)
+    dout = float(n * m * e * f * 4)          # f32 accumulate
+    dense_fl = 2.0 * n * m * c * rs * e * f
+    nnz = float(m * g.row_nnz_est)           # true nonzeros (est.)
+    if cand.method == "dense":
+        return max(dense_fl / PEAK_FLOPS,
+                   (din + dout + itemsize * m * c * rs) / HBM_BW)
+    k_pad = g.k_est(cand.pad_to or 8)
+    ell_bytes = float(m * k_pad * (itemsize + 4))  # value + packed index
+    padded_fl = 2.0 * n * m * k_pad * e * f
+    true_fl = 2.0 * n * nnz * e * f
+    if cand.method == "lowered":
+        im2col = float(n * c * rs * e * f * itemsize)
+        return max(padded_fl / PEAK_FLOPS, (2 * im2col + dout + ell_bytes) / HBM_BW)
+    if cand.method == "csr-direct":
+        return max(padded_fl / PEAK_FLOPS, (din + dout + ell_bytes) / HBM_BW)
+    if cand.method == "pallas":
+        tm = cand.tm or 1
+        tiles = (m + tm - 1) // tm
+        return max(true_fl / PEAK_FLOPS, (din * tiles + dout + ell_bytes) / HBM_BW)
+    raise ValueError(cand.method)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock scoring
+# ---------------------------------------------------------------------------
+
+def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
+                 *, interpret: bool = True):
+    """(fn, args) executing one candidate on a pruned dense (M, C, R, S) bank."""
+    if cand.method == "dense":
+        fn = jax.jit(functools.partial(
+            dense_conv, stride=g.stride, padding=g.pad))
+        return fn, (jnp.asarray(w_dense),)
+    pad_to = cand.pad_to or 8
+    if cand.method == "lowered":
+        ell2d = ell_from_dense(w_dense.reshape(g.m, -1), pad_to=pad_to)
+        fn = jax.jit(functools.partial(
+            lowered_sparse_conv, r=g.r, s=g.s, stride=g.stride, padding=g.pad))
+        return (lambda x, e2d=ell2d: fn(x, e2d)), ()
+    ell = ell_from_dense_conv(w_dense, pad_to=pad_to)
+    if cand.method == "csr-direct":
+        fn = jax.jit(functools.partial(
+            direct_sparse_conv, stride=g.stride, padding=g.pad))
+        return (lambda x, e=ell: fn(x, e)), ()
+    if cand.method == "pallas":
+        return (lambda x, e=ell: sparse_conv(
+            x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
+            interpret=interpret)), ()
+    raise ValueError(cand.method)
+
+
+def measure_candidate(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
+                      x: jax.Array, *, warmup: int = 1, iters: int = 5,
+                      interpret: bool = True) -> float:
+    """Median wall seconds for one candidate on real arrays."""
+    runner, extra = build_runner(g, cand, w_dense, interpret=interpret)
+    if extra:  # dense path: (x, w)
+        return time_fn(runner, x, *extra, warmup=warmup, iters=iters)
+    return time_fn(runner, x, warmup=warmup, iters=iters)
+
+
+def measurable(cand: Candidate, backend: Optional[str] = None) -> bool:
+    """Whether wall-timing this candidate is meaningful on this backend.
+
+    Pallas in interpret mode is Python-executed — its wall time says nothing
+    about the kernel, so off-TPU it is scored by roofline only.
+    """
+    backend = backend or jax.default_backend()
+    return cand.method != "pallas" or backend == "tpu"

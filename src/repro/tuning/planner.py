@@ -1,0 +1,150 @@
+"""Network-level planner: walk a CNN spec, emit an executable per-layer plan.
+
+The planner turns the static candidate space (``space.py``) plus a scoring
+mode (``measure.py``) into a ``{layer_name: PlanEntry}`` plan, consulting and
+filling a persistent :class:`~repro.tuning.cache.PlanCache` so tuning runs
+once per deployment.  ``models/cnn.py`` executes the plan via
+``method="auto"``.
+
+Identical geometries (e.g. repeated ResNet bottlenecks) share one cache key,
+so a 53-conv network typically tunes only a handful of distinct layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.models import cnn
+from repro.tuning.cache import PlanCache, PlanEntry, layer_key
+from repro.tuning.measure import (measurable, measure_candidate,
+                                  roofline_estimate)
+from repro.tuning.space import ConvGeometry, enumerate_candidates
+
+
+def geometry_for(layer: "cnn.Conv", c: int, h: int, w: int, *, batch: int = 1,
+                 dtype: str = "float32") -> ConvGeometry:
+    return ConvGeometry(
+        name=layer.name, m=layer.out_c, c=c, h=h, w=w, r=layer.k, s=layer.k,
+        stride=layer.stride, pad=layer.pad, sparsity=layer.sparsity,
+        batch=batch, dtype=dtype)
+
+
+def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
+               w_dense: Optional[np.ndarray] = None, backend: str = "cpu",
+               interpret: Optional[bool] = None, warmup: int = 1,
+               iters: int = 3) -> PlanEntry:
+    """Score every valid candidate for one layer and return the winner.
+
+    ``interpret=None`` resolves per backend: compiled on TPU, interpret
+    elsewhere — wall-timing an interpret-mode Pallas kernel would measure
+    the Python interpreter, not the kernel.
+    """
+    if interpret is None:
+        interpret = backend != "tpu"
+    cands = enumerate_candidates(g)
+    if mode == "wall":
+        cands = [cd for cd in cands if measurable(cd, backend)]
+    if not cands:
+        return PlanEntry(method="dense", source="heuristic")
+    best, best_t = None, float("inf")
+    rng = np.random.default_rng(0)
+    x = None
+    if mode == "wall":
+        if w_dense is None:
+            raise ValueError("wall-mode tuning needs the layer's dense weights")
+        x = jnp.asarray(rng.standard_normal(
+            (g.batch, g.c, g.h, g.w)).astype(np.float32))
+    for cd in cands:
+        if mode == "wall":
+            t = measure_candidate(g, cd, w_dense, x, warmup=warmup,
+                                  iters=iters, interpret=interpret)
+        else:
+            t = roofline_estimate(g, cd)
+        if t < best_t:
+            best, best_t = cd, t
+    return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
+                     est_s=best_t,
+                     source="measured" if mode == "wall" else "roofline")
+
+
+def plan_network(net: Sequence[Any], in_c: int, image: int, *, batch: int = 1,
+                 dtype: str = "float32", mode: str = "roofline",
+                 cache: Optional[PlanCache] = None,
+                 params: Optional[Dict[str, Any]] = None,
+                 backend: Optional[str] = None,
+                 interpret: Optional[bool] = None,
+                 warmup: int = 1, iters: int = 3,
+                 ) -> Dict[str, PlanEntry]:
+    """Tune every conv layer of a network table; returns name -> PlanEntry.
+
+    Cache hits skip scoring entirely; misses are scored and written back (and
+    persisted to ``cache.path`` if set).  ``mode="roofline"`` needs no
+    weights; ``mode="wall"`` measures on the pruned weights in ``params``
+    (as built by ``cnn.init_cnn``).
+    """
+    if mode not in ("roofline", "wall"):
+        raise ValueError(f"unknown tuning mode {mode!r}")
+    backend = backend or jax.default_backend()
+    plan: Dict[str, PlanEntry] = {}
+    misses = 0
+    for layer, (c, h, w) in cnn.conv_layer_shapes(net, in_c, image):
+        g = geometry_for(layer, c, h, w, batch=batch, dtype=dtype)
+        key = layer_key(g, backend)
+        entry = cache.get(key) if cache is not None else None
+        if entry is None:
+            if layer.sparsity <= 0:
+                # Dense-kept layer: one candidate, nothing to measure.
+                entry = PlanEntry(method="dense", source="heuristic")
+            else:
+                w_dense = None
+                if mode == "wall":
+                    if params is None or layer.name not in params:
+                        raise ValueError(
+                            f"wall-mode tuning needs params for {layer.name}")
+                    w_dense = np.asarray(params[layer.name]["w"])
+                entry = plan_layer(g, mode=mode, w_dense=w_dense,
+                                   backend=backend, interpret=interpret,
+                                   warmup=warmup, iters=iters)
+            misses += 1
+            if cache is not None:
+                cache.put(key, entry)
+        plan[layer.name] = entry
+    if cache is not None and cache.path and misses:
+        cache.save()
+    return plan
+
+
+def apply_plan_to_params(params: Dict[str, Any],
+                         plan: Dict[str, PlanEntry]) -> Dict[str, Any]:
+    """Rebuild per-layer sparse formats at each plan's tuned ``pad_to``.
+
+    Stores them under ``ell_auto`` / ``ell2d_auto`` next to the defaults, so
+    non-auto methods keep working unchanged.  Safe to call repeatedly.
+    """
+    for name, pe in plan.items():
+        entry = params.get(name)
+        if entry is None or "ell" not in entry:
+            continue  # dense-kept layer: nothing to rebuild
+        pad_to = pe.pad_to or 8
+        w = np.asarray(entry["w"])
+        if pe.method == "lowered":
+            entry["ell2d_auto"] = ell_from_dense(
+                w.reshape(w.shape[0], -1), pad_to=pad_to)
+        elif pe.method in ("csr-direct", "pallas"):
+            entry["ell_auto"] = ell_from_dense_conv(w, pad_to=pad_to)
+    return params
+
+
+def format_plan(plan: Dict[str, PlanEntry]) -> str:
+    """Human-readable per-layer plan table (the paper's customization table)."""
+    lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'pad_to':>6} "
+             f"{'est_us':>10} source"]
+    for name, pe in plan.items():
+        lines.append(
+            f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
+            f"{pe.pad_to or '-':>6} {pe.est_s * 1e6:>10.1f} {pe.source}")
+    return "\n".join(lines)

@@ -1,0 +1,128 @@
+"""Candidate space for per-layer kernel customization (paper §3.3-3.4).
+
+Escoin's speedups come from picking, per conv layer, the execution strategy
+and tile shape that fit that layer's geometry and sparsity.  This module
+enumerates the discrete choices the tuner measures over:
+
+  method  ∈ {dense, lowered, csr-direct, pallas}   (paper Figs. 8-11 columns)
+  tm      ∈ output-channel tiles that divide M and fit VMEM (pallas only)
+  pad_to  ∈ ELL row-padding buckets (K granularity; trades padded work for
+            jit-specialisation sharing)
+
+Hardware-infeasible points are pruned statically: the Pallas kernel requires
+stride == 1 and its packed index array must fit the SMEM budget; fully-dense
+layers (sparsity == 0) only ever run dense.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from repro.kernels.sparse_conv.ops import SMEM_BUDGET, tm_candidates
+
+METHODS = ("dense", "lowered", "csr-direct", "pallas")
+
+# ELL K-padding buckets (the paper's kernel-customization table keys on K
+# granularity).  8 is the repo-wide default; 4 trims padded work on very
+# sparse rows; 16 shares jit specialisations across near-equal layers.
+PAD_TO_BUCKETS = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """Static description of one conv layer instance (what the cache keys on).
+
+    m/c: out/in channels; h/w: input spatial dims; r/s: filter dims.
+    """
+
+    name: str
+    m: int
+    c: int
+    h: int
+    w: int
+    r: int
+    s: int
+    stride: int = 1
+    pad: int = 0
+    sparsity: float = 0.0
+    batch: int = 1
+    dtype: str = "float32"
+
+    @property
+    def hp(self) -> int:
+        return self.h + 2 * self.pad
+
+    @property
+    def wp(self) -> int:
+        return self.w + 2 * self.pad
+
+    @property
+    def e(self) -> int:
+        return (self.hp - self.r) // self.stride + 1
+
+    @property
+    def f(self) -> int:
+        return (self.wp - self.s) // self.stride + 1
+
+    @property
+    def row_nnz_est(self) -> int:
+        """Expected nonzeros per output channel at this sparsity."""
+        return max(1, math.ceil(self.c * self.r * self.s * (1.0 - self.sparsity)))
+
+    def k_est(self, pad_to: int) -> int:
+        """Estimated padded ELL row length K for a given pad_to bucket."""
+        pad_to = max(1, pad_to)
+        k = self.row_nnz_est
+        return max(pad_to, ((k + pad_to - 1) // pad_to) * pad_to)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the customization space.
+
+    tm is only meaningful for the pallas method; pad_to only for the sparse
+    formats (lowered / csr-direct / pallas).
+    """
+
+    method: str
+    tm: Optional[int] = None
+    pad_to: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"))
+
+
+def pallas_feasible(g: ConvGeometry, k: int) -> bool:
+    """The Pallas kernel is specialised for stride 1 and SMEM-resident indices."""
+    return g.stride == 1 and g.m * k * 4 <= SMEM_BUDGET
+
+
+def enumerate_candidates(g: ConvGeometry,
+                         methods: Tuple[str, ...] = METHODS) -> List[Candidate]:
+    """All statically-valid customization points for one layer.
+
+    Every emitted pallas ``tm`` divides M and fits the VMEM budget (via
+    ``kernels.sparse_conv.ops.tm_candidates`` — the heuristic the tuner
+    refines); every pallas candidate fits the SMEM budget.
+    """
+    if g.sparsity <= 0.0:
+        # Dense-kept layers (paper: conv1 et al.) have no sparse format.
+        return [Candidate("dense")]
+    out: List[Candidate] = []
+    if "dense" in methods:
+        out.append(Candidate("dense"))
+    for pad_to in PAD_TO_BUCKETS:
+        k = g.k_est(pad_to)
+        if "lowered" in methods:
+            out.append(Candidate("lowered", pad_to=pad_to))
+        if "csr-direct" in methods:
+            out.append(Candidate("csr-direct", pad_to=pad_to))
+        if "pallas" in methods and pallas_feasible(g, k):
+            for tm in tm_candidates(g.m, g.c, g.hp, g.wp, g.e, g.f, k):
+                out.append(Candidate("pallas", tm=tm, pad_to=pad_to))
+    return out

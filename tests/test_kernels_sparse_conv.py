@@ -81,3 +81,29 @@ def test_choose_tm_fits_budget():
     tm = choose_tm(m=256, c=96, hp=31, wp=31, e=27, f=27, k=256)
     assert 256 % tm == 0
     assert (96 * 31 * 31 * 4 + tm * 256 * 4 + tm * 27 * 27 * 4) <= 12 * 2**20
+
+
+@pytest.mark.parametrize("pad_to", [1, 4, 8])
+def test_fully_pruned_bank(pad_to):
+    """Regression: an all-zero filter bank must keep K >= pad_to >= 1 and
+    produce an all-zero output through the Pallas path (no 0-width arrays)."""
+    wt = np.zeros((8, 4, 3, 3), np.float32)
+    ell = ell_from_dense_conv(wt, pad_to=pad_to)
+    assert ell.k >= max(1, pad_to)
+    assert int(np.asarray(ell.nnz).sum()) == 0
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((1, 4, 8, 8)).astype(np.float32))
+    got = sparse_conv(x, ell, padding=1, interpret=True)
+    assert got.shape == (1, 8, 8, 8)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_degenerate_pad_to_clamped():
+    """pad_to < 1 is clamped instead of crashing with ZeroDivisionError."""
+    wt = np.zeros((4, 2, 3, 3), np.float32)
+    assert ell_from_dense_conv(wt, pad_to=0).k >= 1
+
+
+def test_empty_bank_rejected():
+    with pytest.raises(ValueError):
+        ell_from_dense_conv(np.zeros((0, 2, 3, 3), np.float32))

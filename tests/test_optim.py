@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip module on clean envs
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,

@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip module on clean envs
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (bcsr_from_dense, bcsr_to_dense, csr_arrays_from_dense,

@@ -1,0 +1,180 @@
+"""Kernel-customization autotuner: space validity, cache round-trip,
+and method="auto" numerical equivalence (interpret mode, CPU)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
+                                           choose_tm, tm_candidates)
+from repro.models import cnn
+from repro.tuning import (Candidate, ConvGeometry, PlanCache, PlanEntry,
+                          apply_plan_to_params, enumerate_candidates,
+                          layer_key, plan_network, roofline_estimate,
+                          sparsity_bucket)
+
+
+def _geom(**kw):
+    base = dict(name="l", m=64, c=32, h=14, w=14, r=3, s=3, stride=1, pad=1,
+                sparsity=0.7, batch=2)
+    base.update(kw)
+    return ConvGeometry(**base)
+
+
+# ---------------------------------------------------------------------------
+# candidate space
+# ---------------------------------------------------------------------------
+
+def test_candidates_tm_divides_m_and_fits_budgets():
+    g = _geom()
+    cands = enumerate_candidates(g)
+    assert any(c.method == "pallas" for c in cands)
+    for cd in cands:
+        if cd.method != "pallas":
+            continue
+        assert g.m % cd.tm == 0
+        k = g.k_est(cd.pad_to)
+        x_bytes = g.c * g.hp * g.wp * 4
+        assert x_bytes + cd.tm * k * 4 + cd.tm * g.e * g.f * 4 <= VMEM_BUDGET
+        assert g.m * k * 4 <= SMEM_BUDGET
+
+
+def test_dense_layer_space_is_dense_only():
+    assert enumerate_candidates(_geom(sparsity=0.0)) == [Candidate("dense")]
+
+
+def test_strided_layer_has_no_pallas():
+    cands = enumerate_candidates(_geom(stride=2))
+    assert cands and all(c.method != "pallas" for c in cands)
+
+
+def test_smem_heavy_layer_has_no_pallas():
+    # m*k*4 far over the SMEM budget: huge M, near-dense rows.
+    g = _geom(m=8192, c=512, sparsity=0.05)
+    assert all(c.method != "pallas" for c in enumerate_candidates(g))
+
+
+def test_choose_tm_is_first_candidate():
+    args = dict(m=256, c=96, hp=31, wp=31, e=27, f=27, k=256)
+    assert choose_tm(**args) == tm_candidates(**args)[0]
+
+
+def test_roofline_orders_sparse_below_dense():
+    # At 70% sparsity the direct method's bound must beat dense compute.
+    g = _geom(m=256, c=256, h=28, w=28)
+    t_dense = roofline_estimate(g, Candidate("dense"))
+    t_direct = roofline_estimate(g, Candidate("csr-direct", pad_to=8))
+    assert t_direct < t_dense
+
+
+def test_roofline_pallas_tm_amortises_input():
+    g = _geom()
+    t1 = roofline_estimate(g, Candidate("pallas", tm=1, pad_to=8))
+    t64 = roofline_estimate(g, Candidate("pallas", tm=64, pad_to=8))
+    assert t64 <= t1
+
+
+# ---------------------------------------------------------------------------
+# cache / planner round-trip
+# ---------------------------------------------------------------------------
+
+def test_sparsity_bucketing_shares_keys():
+    a = layer_key(_geom(sparsity=0.69), "cpu")
+    b = layer_key(_geom(sparsity=0.71), "cpu")
+    c = layer_key(_geom(sparsity=0.50), "cpu")
+    assert a == b != c
+
+
+def test_plan_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "plans" / "cache.json")
+    net = cnn.alexnet()
+    cache = PlanCache(path)
+    plan = plan_network(net, 3, 99, batch=1, mode="roofline", cache=cache)
+    assert len(cache) > 0
+    # tune -> serialize -> reload -> identical plan, with zero re-tuning
+    # (a miss would write the file again; compare entries directly).
+    reloaded = PlanCache(path)
+    assert reloaded.entries == cache.entries
+    replan = plan_network(net, 3, 99, batch=1, mode="roofline", cache=reloaded)
+    assert replan == plan
+    # every sparse layer got a tuned sparse method under roofline scoring
+    for layer, _ in cnn.conv_layer_shapes(net, 3, 99):
+        pe = plan[layer.name]
+        assert isinstance(pe, PlanEntry)
+        if layer.sparsity == 0:
+            assert pe.method == "dense"
+
+
+def test_plan_cache_version_guard(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 999, "entries": {}}')
+    with pytest.raises(ValueError):
+        PlanCache(str(path))
+
+
+def test_wall_mode_measures_and_picks(tmp_path):
+    # Tiny single-layer net: wall mode must run and record a measured source.
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.7), cnn.Relu()]
+    rng = np.random.default_rng(0)
+    params = cnn.init_cnn(net, 4, rng, 8)
+    plan = plan_network(net, 4, 8, batch=1, mode="wall", cache=PlanCache(),
+                        params=params, iters=1)
+    assert plan["c1"].source == "measured"
+    assert plan["c1"].method in ("dense", "lowered", "csr-direct")
+
+
+# ---------------------------------------------------------------------------
+# method="auto" numerical equivalence (paper layer slices, interpret mode)
+# ---------------------------------------------------------------------------
+
+def _slice(net_name, n_sparse=2, image=12):
+    full = cnn.NETWORKS[net_name]()
+    convs = [l for l, _ in cnn.conv_layer_shapes(full, 3, 224)]
+    picked = ([next(l for l in convs if l.sparsity == 0)]
+              + [l for l in convs if l.sparsity > 0][:n_sparse])
+    out = []
+    for l in picked:
+        out.append(dataclasses.replace(
+            l, out_c=max(8, min(32, l.out_c // 8)), stride=1))
+        out.append(cnn.Relu())
+    return out, image
+
+
+@pytest.mark.parametrize("net_name", ["alexnet", "resnet50"])
+def test_auto_matches_dense_on_slice(net_name):
+    net, image = _slice(net_name)
+    rng = np.random.default_rng(3)
+    params = cnn.init_cnn(net, 3, rng, image)
+    x = jnp.asarray(rng.standard_normal((1, 3, image, image)).astype(np.float32))
+    plan = plan_network(net, 3, image, batch=1, mode="roofline",
+                        cache=PlanCache())
+    apply_plan_to_params(params, plan)
+    y_auto = cnn.cnn_forward(net, params, x, method="auto", plan=plan)
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_without_plan_self_tunes():
+    net = [cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+           cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75)]
+    rng = np.random.default_rng(5)
+    params = cnn.init_cnn(net, 3, rng, 8)
+    x = jnp.asarray(rng.standard_normal((1, 3, 8, 8)).astype(np.float32))
+    y_auto = cnn.cnn_forward(net, params, x, method="auto")
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_apply_plan_rebuilds_formats():
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.8)]
+    rng = np.random.default_rng(7)
+    params = cnn.init_cnn(net, 4, rng, 8)
+    plan = {"c1": PlanEntry(method="csr-direct", pad_to=4)}
+    apply_plan_to_params(params, plan)
+    assert params["c1"]["ell_auto"].k % 4 == 0
+    plan2 = {"c1": PlanEntry(method="lowered", pad_to=16)}
+    apply_plan_to_params(params, plan2)
+    assert params["c1"]["ell2d_auto"].k % 16 == 0
