@@ -1,7 +1,7 @@
 """Beyond-paper Fig. 12: tuned-vs-fixed speedup per layer.
 
 For every model, the autotuner (``repro.tuning``) measures each candidate
-(method x tm x pad_to) per *distinct* sparse conv geometry and picks a
+(method x (tm, te, tf) x pad_to) per *distinct* sparse conv geometry and picks a
 winner; this table reports, per geometry, the tuned wall time against each
 fixed single-method baseline — the measured counterpart of the paper's
 kernel-customization table (§3.3-3.4).
@@ -60,7 +60,8 @@ def bench_model(name: str, *, iters: int = 3) -> List[str]:
             lines.append(row(
                 f"fig12/{name}/{layer.name}", pe.est_s,
                 f"method={pe.method};tm={pe.tm or '-'};"
-                f"pad_to={pe.pad_to or '-'};"
+                f"te={pe.te or '-'};tf={pe.tf or '-'};"
+                f"pad_to={pe.pad_to or '-'};stride={g.stride};"
                 f"speedup_vs_dense={fixed['dense'] / pe.est_s:.2f};"
                 f"speedup_vs_best_fixed={best_fixed / pe.est_s:.2f}"))
         for m in FIXED:

@@ -21,10 +21,22 @@ import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import dense_conv, direct_sparse_conv, lowered_sparse_conv
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
 from repro.models import cnn
 
 # reduced-scale geometry for CPU timing (methods see identical shapes)
 SCALES = {"alexnet": (99, 4), "googlenet": (96, 2), "resnet50": (96, 2)}
+
+# Strided sparse layers (reduced-scale stand-ins for AlexNet conv1-class
+# stride-4 stems and ResNet stride-2 bottleneck entries).  These are the
+# layers the old Pallas kernel refused (stride != 1 fell back to pure JAX);
+# the spatially-tiled kernel runs them in-kernel, so they get their own
+# fig8 rows: (name, C, H, M, R, stride, pad, sparsity).
+STRIDED_LAYERS = [
+    ("stem_s4", 3, 99, 96, 11, 4, 0, 0.80),
+    ("res_s2", 64, 48, 64, 3, 2, 1, 0.70),
+]
 
 
 def bench_model(name: str, *, iters: int = 3, autotune: bool = False) -> List[str]:
@@ -94,8 +106,44 @@ def bench_model(name: str, *, iters: int = 3, autotune: bool = False) -> List[st
     return out
 
 
+def bench_strided(*, iters: int = 3, batch: int = 2) -> List[str]:
+    """Per-method wall rows for strided sparse layers (stride 2 and 4).
+
+    The Pallas kernel itself is interpret-mode on CPU (not wall-comparable,
+    same policy as the per-model rows); its strided coverage is exercised by
+    the tier-1 parity tests and ranked by the tuner's roofline model.
+    """
+    rng = np.random.default_rng(0)
+    out: List[str] = []
+    for name, c, h, m, r, stride, pad, sp in STRIDED_LAYERS:
+        x = jnp.asarray(rng.standard_normal((batch, c, h, h)).astype(np.float32))
+        wt = np.asarray(magnitude_prune(jnp.asarray(
+            rng.standard_normal((m, c, r, r)).astype(np.float32)), sp))
+        ell = ell_from_dense_conv(wt)
+        ell2d = ell_from_dense(wt.reshape(m, -1))
+        fns = {
+            "dense": jax.jit(functools.partial(
+                dense_conv, stride=stride, padding=pad)),
+            "lowered": jax.jit(functools.partial(
+                lowered_sparse_conv, r=r, s=r, stride=stride, padding=pad)),
+            "csr-direct": jax.jit(functools.partial(
+                direct_sparse_conv, stride=stride, padding=pad)),
+        }
+        args = {"dense": (x, jnp.asarray(wt)), "lowered": (x, ell2d),
+                "csr-direct": (x, ell)}
+        base = None
+        for meth in ("dense", "lowered", "csr-direct"):
+            t = time_fn(fns[meth], *args[meth], warmup=1, iters=iters)
+            base = t if base is None else base
+            out.append(row(
+                f"fig8/strided/{name}/{meth}", t,
+                f"stride={stride};speedup_vs_dense={base / t:.2f}"))
+    return out
+
+
 def run(autotune: bool = False) -> List[str]:
     lines = []
     for name in SCALES:
         lines += bench_model(name, autotune=autotune)
+    lines += bench_strided()
     return lines

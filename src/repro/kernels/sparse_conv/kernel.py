@@ -2,23 +2,42 @@
 
 TPU adaptation of the paper's GPU kernel (Section 3.2/3.3):
 
-  GPU thread block per output channel      -> grid cell per (image, channel tile)
-  warp over consecutive ``w`` (coalescing) -> the (E, F) output window lives in
-                                              VREG lanes; each nonzero issues one
-                                              full-width FMA over the window
+  GPU thread block per output channel      -> grid cell per (image, spatial
+                                              tile, channel tile)
+  warp over consecutive ``w`` (coalescing) -> the (TE, TF) output tile lives in
+                                              VREG lanes; each nonzero issues
+                                              one full-width FMA over the tile
   CSR value/colidx in shared memory        -> packed (c,r,s) indices in SMEM via
                                               scalar prefetch; values in VMEM
-  inputs via read-only texture cache       -> the whole (C, Hp, Wp) padded input
-                                              for one image staged HBM->VMEM once
-                                              and reused by every nonzero of every
-                                              channel in the tile
-  partial sums in registers                -> float32 accumulator in VMEM out block
-  rowptr loop bound                        -> fori_loop bounded by the true row nnz
-                                              (padding entries are never touched)
+  inputs via read-only texture cache       -> the halo'd (C, halo_h, halo_w)
+                                              input block for one spatial tile
+                                              DMA'd HBM->VMEM once and reused by
+                                              every nonzero of every channel
+                                              tile of that cell
+  partial sums in registers                -> float32 accumulator in VMEM out
+                                              block
+  rowptr loop bound                        -> fori_loop bounded by the true row
+                                              nnz (padding entries never touched)
 
-The kernel is specialised for stride == 1 (the common case in the paper's
-models); strided layers fall back to the pure-JAX direct path — the analogue
-of the paper's per-parameter-region "kernel customization".
+Spatial tiling: the grid is (N, ceil(E/TE), ceil(F/TF), M/TM).  Each spatial
+cell stages a *halo'd* input block of ``(TE-1)*stride + R`` by
+``(TF-1)*stride + S`` rows/cols — overlapping blocks cannot be expressed with
+blocked BlockSpecs, so the input stays in HBM (``memory_space=ANY``) and the
+kernel issues an explicit sliced DMA into a VMEM scratch buffer, guarded by
+``mt == 0`` so the channel-tile loop (the innermost grid dimension) reuses
+the staged block.  This removes the whole-padded-image-in-VMEM restriction:
+arbitrarily large feature maps run through the kernel as long as one halo'd
+block fits the budget.
+
+Strides: each nonzero reads a dynamic-start window of extent
+``(T-1)*stride + 1`` and applies a *static* ``[::stride]`` slice — the same
+dynamic-start-slice-plus-static-stride trick as ``core/direct_conv.py`` —
+so ``stride >= 1`` runs in-kernel instead of falling back to pure JAX.
+
+Edge tiles: TE/TF need not divide E/F.  The grid uses ceiling division;
+Pallas drops out-of-range output writes, and the input is zero-padded so the
+last tile's halo window stays in bounds (the extra zeros only ever feed
+discarded output positions).
 
 Index packing: each nonzero's (c, r, s) is packed into one int32 as
 ``c * (R*S) + r * S + s`` to keep the SMEM footprint at M*K*4 bytes; the
@@ -38,10 +57,33 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
-            x_ref, val_ref,              # VMEM in
+            x_ref,                       # HBM/ANY: halo-padded input
+            val_ref,                     # VMEM in
             out_ref,                     # VMEM out
-            *, tm: int, k: int, rs: int, s: int, e: int, f: int):
-    mt = pl.program_id(1)
+            xblk_ref, sem,               # VMEM scratch + DMA semaphore
+            *, tm: int, rs: int, s: int, stride: int, te: int, tf: int,
+            halo_h: int, halo_w: int):
+    ni = pl.program_id(0)
+    et = pl.program_id(1)
+    ft = pl.program_id(2)
+    mt = pl.program_id(3)
+
+    # Stage the halo'd input block once per (image, spatial tile); the
+    # channel-tile loop is the innermost grid dim, so the block persists in
+    # scratch across every mt of this cell (TPU grids run sequentially).
+    @pl.when(mt == 0)
+    def _stage():
+        dma = pltpu.make_async_copy(
+            x_ref.at[ni, :, pl.ds(et * te * stride, halo_h),
+                     pl.ds(ft * tf * stride, halo_w)],
+            xblk_ref, sem)
+        dma.start()
+        dma.wait()
+
+    # Dynamic-start window extent for a static [::stride] landing exactly on
+    # the TE (resp. TF) output positions of this tile.
+    e_ext = (te - 1) * stride + 1
+    f_ext = (tf - 1) * stride + 1
 
     def channel(ml, _):
         m = mt * tm + ml
@@ -52,11 +94,11 @@ def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
             rem = packed - c * rs
             r = rem // s
             ss = rem - r * s
-            # Dynamic-start static-size window: the direct-indexing load.
-            win = x_ref[0, c, pl.ds(r, e), pl.ds(ss, f)]
+            win = xblk_ref[c, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
+            win = win[::stride, ::stride]
             return acc + val_ref[ml, kk].astype(jnp.float32) * win.astype(jnp.float32)
 
-        acc0 = jnp.zeros((e, f), dtype=jnp.float32)
+        acc0 = jnp.zeros((te, tf), dtype=jnp.float32)
         # CSR semantics: iterate only this row's true nonzeros.
         acc = lax.fori_loop(0, nnz_ref[m], body, acc0)
         out_ref[0, ml, :, :] = acc
@@ -66,11 +108,15 @@ def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tm", "k", "rs", "s", "e", "f", "interpret"))
+    jax.jit,
+    static_argnames=("tm", "k", "rs", "s", "e", "f", "stride", "te", "tf",
+                     "interpret"))
 def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                        nnz: jax.Array, *, tm: int, k: int, rs: int, s: int,
-                       e: int, f: int, interpret: bool = False) -> jax.Array:
-    """Launch the direct sparse conv kernel.
+                       e: int, f: int, stride: int = 1, te: int | None = None,
+                       tf: int | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Launch the spatially-tiled direct sparse conv kernel.
 
     Args:
       xpad:       (N, C, Hp, Wp) pre-padded input (the paper's pad_in step).
@@ -78,25 +124,50 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
       packed_idx: (M, K) int32, c*(R*S) + r*S + s.
       nnz:        (M,) int32 true row lengths.
       tm:         output-channel tile (VMEM/occupancy knob).
-      e, f:       output spatial dims (stride 1: e = Hp - R + 1 etc.).
+      e, f:       output spatial dims ((Hp - R) // stride + 1 etc.).
+      stride:     conv stride (>= 1), applied in-kernel.
+      te, tf:     output spatial tile dims (default: whole output, i.e. the
+                  untiled schedule).  Need not divide e/f — edge tiles are
+                  handled by ceiling-division grids + masked writes.
 
     Returns: (N, M, E, F) float32.
     """
     n, c, hp, wp = xpad.shape
     m = value.shape[0]
     assert m % tm == 0, (m, tm)
-    grid = (n, m // tm)
+    te = e if te is None else min(te, e)
+    tf = f if tf is None else min(tf, f)
+    r = rs // s
+    halo_h = (te - 1) * stride + r
+    halo_w = (tf - 1) * stride + s
+    et_n = pl.cdiv(e, te)
+    ft_n = pl.cdiv(f, tf)
+    # Zero-pad so the *last* tile's halo window stays in bounds; the extra
+    # rows/cols only ever feed output positions >= E/F, which Pallas drops.
+    need_h = (et_n * te - 1) * stride + r
+    need_w = (ft_n * tf - 1) * stride + s
+    if need_h > hp or need_w > wp:
+        xpad = jnp.pad(xpad, ((0, 0), (0, 0), (0, max(0, need_h - hp)),
+                              (0, max(0, need_w - wp))))
+    grid = (n, et_n, ft_n, m // tm)
     return pl.pallas_call(
-        functools.partial(_kernel, tm=tm, k=k, rs=rs, s=s, e=e, f=f),
+        functools.partial(_kernel, tm=tm, rs=rs, s=s, stride=stride,
+                          te=te, tf=tf, halo_h=halo_h, halo_w=halo_w),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, c, hp, wp), lambda ni, mt, idx, nnz_: (ni, 0, 0, 0)),
-                pl.BlockSpec((tm, k), lambda ni, mt, idx, nnz_: (mt, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((tm, k),
+                             lambda ni, et, ft, mt, idx, nnz_: (mt, 0)),
             ],
-            out_specs=pl.BlockSpec((1, tm, e, f),
-                                   lambda ni, mt, idx, nnz_: (ni, mt, 0, 0)),
+            out_specs=pl.BlockSpec(
+                (1, tm, te, tf),
+                lambda ni, et, ft, mt, idx, nnz_: (ni, mt, et, ft)),
+            scratch_shapes=[
+                pltpu.VMEM((c, halo_h, halo_w), xpad.dtype),
+                pltpu.SemaphoreType.DMA,
+            ],
         ),
         out_shape=jax.ShapeDtypeStruct((n, m, e, f), jnp.float32),
         interpret=interpret,

@@ -1,18 +1,25 @@
 """Jit'd public wrapper around the direct sparse conv Pallas kernel.
 
-Handles: input padding (pad_in), index packing, channel-tile autotuning
-(the paper's kernel-customisation table), the stride>1 fallback to the
-pure-JAX direct path, and dtype policy (bf16/f32 in, f32 accumulate).
+Handles: input padding (pad_in), index packing, tile selection — output
+channels ``tm`` and output spatial tiles ``(te, tf)``, the paper's
+kernel-customisation table — dtype policy (bf16/f32 in, f32 accumulate),
+and the fallback to the pure-JAX direct path for layers whose packed index
+array busts the SMEM budget or for which no VMEM-feasible tiling exists.
+
+Strided layers and feature maps larger than VMEM run through the Pallas
+kernel: the kernel tiles the output spatially with halo'd input blocks and
+applies the stride in-kernel, so the old stride==1 / whole-image-in-VMEM
+restrictions are gone.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.direct_conv import direct_sparse_conv
+from repro.core.direct_conv import direct_sparse_conv, out_spatial
 from repro.core.sparse_format import EllConv, ell_from_dense_conv
 from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 
@@ -27,16 +34,33 @@ VMEM_BUDGET = _VMEM_BUDGET
 SMEM_BUDGET = _SMEM_BUDGET
 
 _TM_LADDER = (128, 64, 32, 16, 8, 4, 2, 1)
+# Output spatial tile ladder (besides the untiled full extent).
+_SPATIAL_LADDER = (128, 64, 32, 16, 8)
+
+
+def halo_extent(t: int, stride: int, r: int) -> int:
+    """Input rows/cols one output tile of ``t`` positions touches."""
+    return (t - 1) * stride + r
+
+
+def spatial_candidates(e: int) -> List[int]:
+    """Output tile extents to consider for one spatial axis, largest first.
+
+    The full extent (untiled) comes first — when it fits it is the best
+    schedule (no halo re-fetch); the ladder below it trades halo overlap for
+    a bounded VMEM block on large feature maps.
+    """
+    return [e] + [t for t in _SPATIAL_LADDER if t < e]
 
 
 def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
                   k: int) -> List[int]:
-    """All output-channel tiles that divide M and fit the VMEM budget,
-    largest first.
+    """Output-channel tiles that divide M and fit VMEM with the *whole*
+    padded image staged (the untiled spatial schedule), largest first.
 
-    Working set per grid cell = input block + value block + f32 out block.
-    This is the search space the ``repro.tuning`` autotuner measures over;
-    ``choose_tm`` below is its static heuristic seed (largest feasible tile).
+    Returns ``[]`` when even TM=1 busts the budget — callers must then tile
+    spatially (``tile_candidates``) or fall back to the pure-JAX path.
+    Returning ``[1]`` here used to launch an over-budget kernel.
     """
     x_bytes = c * hp * wp * 4
     out: List[int] = []
@@ -47,17 +71,70 @@ def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
         out_bytes = tm * e * f * 4
         if x_bytes + val_bytes + out_bytes <= _VMEM_BUDGET:
             out.append(tm)
-    return out or [1]
+    return out
+
+
+def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                stride: int, tm: int, te: int, tf: int) -> bool:
+    """Whether one (tm, te, tf) tiling's working set — halo'd input block +
+    value block + f32 out tile — fits the VMEM budget."""
+    if tm < 1 or m % tm:
+        return False
+    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
+    return x_bytes + tm * k * 4 + tm * te * tf * 4 <= _VMEM_BUDGET
+
+
+def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                    stride: int = 1,
+                    tms: Optional[Tuple[int, ...]] = None,
+                    ) -> List[Tuple[int, int, int]]:
+    """All (tm, te, tf) tilings whose VMEM working set fits, preferred first.
+
+    Preference order: fewest spatial cells (least halo re-fetch), then least
+    total staged input traffic, then largest tm — so when the whole image
+    fits, the first candidate is the old untiled schedule with the largest
+    feasible channel tile.  ``tms`` overrides the channel-tile ladder (e.g.
+    a caller-pinned tm that the ladder doesn't contain).
+    """
+    out: List[Tuple[int, int, int]] = []
+    for te in spatial_candidates(e):
+        for tf in spatial_candidates(f):
+            for tm in (tms or _TM_LADDER):
+                if tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf):
+                    out.append((tm, te, tf))
+
+    def pref(cand: Tuple[int, int, int]) -> Tuple[int, int, int]:
+        tm, te, tf = cand
+        cells = -(-e // te) * (-(-f // tf))
+        staged = cells * c * halo_extent(te, stride, r) * halo_extent(tf, stride, s)
+        return (cells, staged, -tm)
+
+    return sorted(out, key=pref)
+
+
+def choose_tiles(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                 stride: int = 1) -> Optional[Tuple[int, int, int]]:
+    """Static heuristic seed: the preferred feasible (tm, te, tf), or None
+    when no tiling fits (caller falls back to the pure-JAX direct path)."""
+    cands = tile_candidates(m, c, e, f, k, r, s, stride)
+    return cands[0] if cands else None
 
 
 def choose_tm(m: int, c: int, hp: int, wp: int, e: int, f: int, k: int) -> int:
-    """Pick the largest output-channel tile whose VMEM working set fits.
+    """Pick the largest output-channel tile whose untiled-spatial VMEM
+    working set fits.
 
     Mirrors the paper's per-layer kernel specialisation: small, few-channel
-    layers get a big TM (amortise the input stage-in); huge feature maps get
-    TM=1.  The measurement-driven refinement lives in ``repro.tuning``.
+    layers get a big TM (amortise the input stage-in); the measurement-driven
+    refinement lives in ``repro.tuning``.  Raises when nothing fits — use
+    ``choose_tiles`` (spatial tiling) for such layers.
     """
-    return tm_candidates(m, c, hp, wp, e, f, k)[0]
+    cands = tm_candidates(m, c, hp, wp, e, f, k)
+    if not cands:
+        raise ValueError(
+            f"no feasible untiled tm for m={m} c={c} hp={hp} wp={wp}; "
+            "the feature map needs spatial tiling (choose_tiles)")
+    return cands[0]
 
 
 def pack_indices(ell: EllConv) -> jax.Array:
@@ -68,27 +145,49 @@ def pack_indices(ell: EllConv) -> jax.Array:
 
 def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
                 padding: int = 0, tm: Optional[int] = None,
+                te: Optional[int] = None, tf: Optional[int] = None,
                 interpret: bool = False) -> jax.Array:
-    """Direct sparse convolution, Pallas-accelerated where specialised.
+    """Direct sparse convolution, Pallas-accelerated where feasible.
 
     (N, C, H, W) input, ELL filter bank for (M, C, R, S) weights ->
-    (N, M, E, F) in x.dtype.
+    (N, M, E, F) in x.dtype.  Any stride >= 1 runs in-kernel; tm/te/tf
+    default to the static heuristic (``choose_tiles``) and are the knobs
+    the ``repro.tuning`` autotuner turns.  Falls back to the pure-JAX
+    direct path only when the packed index array busts the SMEM budget or
+    no VMEM-feasible tiling exists.
     """
     m, c, r, s = ell.shape
     k = ell.k
-    if stride != 1 or m * k * 4 > _SMEM_BUDGET:
-        # Kernel customisation fallback: strided / index-heavy layers use the
-        # pure-JAX direct path (same algorithm, XLA-scheduled).
+    if m * k * 4 > _SMEM_BUDGET:
+        # Index-heavy layers: packed indices cannot be scalar-prefetched.
         return direct_sparse_conv(x, ell, stride=stride, padding=padding)
     n, _, h, w = x.shape
+    e, f = out_spatial(h, w, r, s, stride, padding)
+    if tm is not None and te is not None and tf is not None:
+        # Fully-specified tiling (tuned plan / caller override): honor it
+        # when it fits, never launch an over-budget kernel.
+        te, tf = min(te, e), min(tf, f)
+        if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf):
+            return direct_sparse_conv(x, ell, stride=stride, padding=padding)
+    else:
+        # A pinned tm need not sit on the default ladder (e.g. tm=24 for
+        # m=48): enumerate spatial tiles for exactly that tm.
+        cands = tile_candidates(m, c, e, f, k, r, s, stride,
+                                tms=None if tm is None else (tm,))
+        if te is not None:
+            cands = [t for t in cands if t[1] == min(te, e)]
+        if tf is not None:
+            cands = [t for t in cands if t[2] == min(tf, f)]
+        if not cands:
+            # No in-budget tiling (or the requested one is infeasible): use
+            # the XLA-scheduled direct path.
+            return direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        tm, te, tf = cands[0]
     xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
-    hp, wp = h + 2 * padding, w + 2 * padding
-    e, f = hp - r + 1, wp - s + 1
-    if tm is None:
-        tm = choose_tm(m, c, hp, wp, e, f, k)
     out = sparse_conv_pallas(
         xpad, ell.value, pack_indices(ell), ell.nnz,
-        tm=tm, k=k, rs=r * s, s=s, e=e, f=f, interpret=interpret)
+        tm=tm, k=k, rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
+        interpret=interpret)
     return out.astype(x.dtype)
 
 

@@ -32,14 +32,18 @@ from repro.models import transformer as T
 
 
 def sparsify_params(params, cfg, sparsity: float, block=(16, 16), min_dim=64):
-    """Prune + convert every large 2-D linear weight to Escoin BCSR."""
-    def visit(p):
+    """Prune + convert every large 2-D linear weight to Escoin BCSR.
+
+    ``conv`` must fire on *every* array leaf — including leaves held in
+    lists/tuples and an array at the pytree root (converting only
+    dict-valued parents silently served those weights dense).
+    """
+    def visit(p, name=""):
         if isinstance(p, dict):
-            return {k: (visit(v) if isinstance(v, (dict, list)) else conv(k, v))
-                    for k, v in p.items()}
-        if isinstance(p, list):
-            return [visit(v) for v in p]
-        return p
+            return {k: visit(v, k) for k, v in p.items()}
+        if isinstance(p, (list, tuple)):
+            return type(p)(visit(v, name) for v in p)
+        return conv(name, p)
 
     skip = {"embed", "lm_head", "router", "conv_w"}
 

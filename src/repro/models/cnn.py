@@ -203,13 +203,16 @@ def init_cnn(net: Sequence[Any], in_c: int, rng: np.random.Generator,
 
 def _conv_apply(l: Conv, entry: Dict[str, Any], x: jax.Array, method: str,
                 plan: Optional[Dict[str, Any]] = None) -> jax.Array:
-    tm = None
+    tm = te = tf = None
     if method == "auto":
         # Per-layer kernel customization: the tuned plan names the method
-        # (and tm / pad_to) for this layer; missing entries fall back dense.
+        # (and tm/te/tf/pad_to) for this layer; missing entries fall back
+        # dense.  Strided layers are pallas-eligible — the kernel applies
+        # the stride in-kernel.
         pe = (plan or {}).get(l.name)
         method = pe.method if pe is not None else "dense"
-        tm = pe.tm if pe is not None else None
+        if pe is not None:
+            tm, te, tf = pe.tm, pe.te, pe.tf
         ell = entry.get("ell_auto", entry.get("ell"))
         ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
     else:
@@ -222,8 +225,8 @@ def _conv_apply(l: Conv, entry: Dict[str, Any], x: jax.Array, method: str,
     elif method == "csr-direct":
         y = direct_sparse_conv(x, ell, stride=l.stride, padding=l.pad)
     elif method == "pallas":
-        y = pallas_sparse_conv(x, ell, stride=l.stride,
-                               padding=l.pad, tm=tm, interpret=True)
+        y = pallas_sparse_conv(x, ell, stride=l.stride, padding=l.pad,
+                               tm=tm, te=te, tf=tf, interpret=True)
     else:
         raise ValueError(method)
     return y + entry["b"][None, :, None, None]

@@ -8,13 +8,16 @@ the cache tensor shape never changes, there is exactly ONE compiled decode
 program regardless of arrival pattern — the property that makes this design
 deployable on TPU serving pods.
 
-Per-slot position bookkeeping: requests at different generation depths share
-a step by passing per-slot ``cur_len`` masks.  The model's decode path takes
-a scalar ``cur_len`` (uniform depth) — the engine therefore tracks a per-slot
-offset and uses the *max* length for masking while writing each slot's KV at
-its own position via the position argument.  For simplicity and correctness,
-admission happens in waves: new requests are prefilling token-by-token in
-otherwise idle slots (correct, if not latency-optimal).
+Position bookkeeping: the model's decode path takes a *scalar* ``cur_len``
+— every slot's KV is written at one shared position per tick.  The engine
+therefore drives a monotonic write cursor (reset only when the batch fully
+drains) so the write position never regresses and live KV is never
+clobbered, and tracks a per-slot ``pos`` for retirement so each request is
+retired at its own depth.  Mid-stream admission is capacity-gated: a
+request only enters a free slot when the cache depth remaining above the
+cursor covers its prompt + generation budget; otherwise it waits for the
+batch to drain (continuous batching degrades to waves near capacity —
+correct, if not latency-optimal).
 """
 from __future__ import annotations
 
@@ -56,20 +59,36 @@ class ContinuousBatcher:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.max_len = max_len
         self.queue: List[Request] = []
+        # Oversize-rejected requests: popped from the queue at admission, so
+        # they must be tracked here or they vanish from the finished list.
+        self.rejected: List[Request] = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def admit(self) -> int:
+    def admit(self, budget: Optional[int] = None) -> int:
+        """Fill free slots from the queue.
+
+        ``budget`` is the cache depth still available (engine: max_len minus
+        the current write cursor).  Requests that can never fit max_len are
+        rejected outright; requests that merely don't fit the *remaining*
+        budget stay queued until the batch drains and the cursor resets.
+        """
+        budget = self.max_len if budget is None else budget
         admitted = 0
         for slot in self.slots:
             if not self.queue:
                 break
             if slot.free:
-                req = self.queue.pop(0)
+                req = self.queue[0]
                 if len(req.prompt) + req.max_new_tokens > self.max_len:
+                    self.queue.pop(0)
                     req.done = True  # reject oversize; surfaced to caller
+                    self.rejected.append(req)
                     continue
+                if len(req.prompt) + req.max_new_tokens > budget:
+                    break  # not enough cache left this wave: wait, don't drop
+                self.queue.pop(0)
                 slot.request = req
                 slot.pos = 0
                 slot.prompt_cursor = 0
@@ -110,8 +129,13 @@ class ServeEngine:
         self.cache = cache
         self.batcher = ContinuousBatcher(n_slots, max_len)
         self.n_slots = n_slots
+        self.max_len = max_len
         self.pad_id = pad_id
         self._tick = 0
+        # Shared KV write position: monotonic while any slot is live, reset
+        # only when the batch fully drains.  Taking max(slot.pos) instead
+        # would regress when the deepest slot retires and overwrite live KV.
+        self._cursor = 0
 
     def submit(self, req: Request) -> None:
         self.batcher.submit(req)
@@ -129,12 +153,13 @@ class ServeEngine:
         return toks
 
     def tick(self) -> None:
-        self.batcher.admit()
+        self.batcher.admit(budget=self.max_len - self._cursor)
         if self.batcher.active == 0:
             return
         toks = self._feed_tokens()
-        # uniform-depth stepping: cur_len = max slot position this tick
-        cur = max((s.pos for s in self.batcher.slots if not s.free), default=0)
+        # Shared-position stepping: all live slots write KV at the engine
+        # cursor (the model's cur_len is a scalar).
+        cur = self._cursor
         nxt, self.cache = self.step(self.params, jnp.asarray(toks),
                                     self.cache, jnp.int32(cur))
         nxt = np.asarray(nxt)
@@ -142,14 +167,20 @@ class ServeEngine:
             req = slot.request
             if req is None:
                 continue
-            slot.pos = cur + 1
+            # Advance each slot's position individually: snapping to the
+            # global max would jump mid-stream admissions to the deepest
+            # slot's depth and make hit_cap retire fresh requests early.
+            slot.pos += 1
             if slot.prompt_cursor < len(req.prompt):
                 slot.prompt_cursor += 1
                 if slot.prompt_cursor == len(req.prompt):
                     req.output.append(int(nxt[i]))  # first generated token
             else:
                 req.output.append(int(nxt[i]))
+        self._cursor += 1
         self.batcher.retire()
+        if self.batcher.active == 0:
+            self._cursor = 0  # batch drained: next wave reuses the cache
         self._tick += 1
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
@@ -161,6 +192,12 @@ class ServeEngine:
                             if r is not None and r.done and r not in finished)
             if not self.batcher.queue and self.batcher.active == 0:
                 break
-        # collect any stragglers
+        # collect any stragglers: requests still queued, and oversize
+        # rejections (popped from the queue at admission — sweeping only the
+        # queue silently dropped them from the finished list).  Rejections
+        # are drained, not copied: a reused engine must not re-surface them
+        # (or leak them) on the next drain cycle.
         finished.extend(r for r in self.batcher.queue if r.done)
+        finished.extend(r for r in self.batcher.rejected if r not in finished)
+        self.batcher.rejected.clear()
         return finished

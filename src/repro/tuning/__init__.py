@@ -3,7 +3,9 @@
 Per-layer method/tile selection, measurement-driven with an analytical
 roofline fallback, persisted to a JSON plan cache:
 
-  space    -- candidate enumeration (method x tm x pad_to) from geometry
+  space    -- candidate enumeration (method x (tm, te, tf) x pad_to) from
+              geometry; spatial tiles come from the kernel's halo'd-block
+              VMEM feasibility model
   measure  -- wall-clock timing + roofline scoring of candidates
   cache    -- versioned JSON plan cache keyed on geometry/sparsity/dtype/backend
   planner  -- network walker producing executable {layer: PlanEntry} plans

@@ -9,9 +9,14 @@ models share one entry.
 
 Format (``docs/autotuning.md`` documents it for humans):
 
-    {"version": 1,
-     "entries": {"<key>": {"method": "pallas", "tm": 64, "pad_to": 8,
-                           "est_s": 1.2e-4, "source": "roofline"}}}
+    {"version": 2,
+     "entries": {"<key>": {"method": "pallas", "tm": 64, "te": 32, "tf": 32,
+                           "pad_to": 8, "est_s": 1.2e-4, "source": "roofline"}}}
+
+Version history: v2 added the output spatial tile ``(te, tf)`` to pallas
+entries.  v1 documents load via migration — their entries get
+``te = tf = None``, the untiled full-extent schedule, which is exactly what
+the v1 kernel executed — and are re-persisted as v2 on the next save.
 """
 from __future__ import annotations
 
@@ -22,7 +27,9 @@ from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+# Older schema versions load() can migrate in-memory (see module docstring).
+MIGRATABLE_VERSIONS = (1,)
 
 # Sparsity bucket width for cache keys: layers within 5% density share plans.
 SPARSITY_BUCKET = 0.05
@@ -35,20 +42,25 @@ class PlanEntry:
     method: str
     tm: Optional[int] = None
     pad_to: Optional[int] = None
+    te: Optional[int] = None      # output spatial tile (None: untiled)
+    tf: Optional[int] = None
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
 
     @property
     def candidate(self) -> Candidate:
-        return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to)
+        return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to,
+                         te=self.te, tf=self.tf)
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
+                "te": self.te, "tf": self.tf,
                 "est_s": self.est_s, "source": self.source}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanEntry":
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
+                   te=d.get("te"), tf=d.get("tf"),
                    est_s=float(d.get("est_s", 0.0)),
                    source=d.get("source", "heuristic"))
 
@@ -83,10 +95,15 @@ class PlanCache:
         path = path or self.path
         with open(path) as fh:
             doc = json.load(fh)
-        if doc.get("version") != CACHE_VERSION:
+        version = doc.get("version")
+        if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
             raise ValueError(
-                f"plan cache {path} has version {doc.get('version')!r}, "
-                f"expected {CACHE_VERSION}")
+                f"plan cache {path} has version {version!r}, "
+                f"expected {CACHE_VERSION} (or migratable "
+                f"{MIGRATABLE_VERSIONS})")
+        # v1 -> v2 migration happens in from_dict: absent te/tf default to
+        # None — the untiled schedule the v1 kernel ran.  save() re-persists
+        # as the current version.
         self.entries = {k: PlanEntry.from_dict(v)
                         for k, v in doc.get("entries", {}).items()}
         return self

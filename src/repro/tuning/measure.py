@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
-from repro.kernels.sparse_conv.ops import sparse_conv
+from repro.kernels.sparse_conv.ops import halo_extent, sparse_conv
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 from repro.tuning.space import Candidate, ConvGeometry
 
@@ -58,10 +58,12 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
                   removes; sparse flops over the padded ELL rows.
       csr-direct  streams input + output + ELL (value, packed idx); the scan
                   covers all K padded slots, so padded K costs flops.
-      pallas      same traffic, but the input block is staged HBM->VMEM once
-                  per (image, channel-tile) grid cell: larger tm amortises
-                  the stage-in (the tuner's main tm signal), while the nnz
-                  loop bound skips padding, so padded K costs no flops.
+      pallas      same traffic, but the halo'd input block is staged
+                  HBM->VMEM once per (image, spatial-tile) grid cell and
+                  reused across channel tiles: smaller (te, tf) tiles cost
+                  more halo re-fetch (the tuner's main spatial signal),
+                  while the nnz loop bound skips padding, so padded K costs
+                  no flops.
     """
     n, m, c = g.batch, g.m, g.c
     rs = g.r * g.s
@@ -84,9 +86,13 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     if cand.method == "csr-direct":
         return max(padded_fl / PEAK_FLOPS, (din + dout + ell_bytes) / HBM_BW)
     if cand.method == "pallas":
-        tm = cand.tm or 1
-        tiles = (m + tm - 1) // tm
-        return max(true_fl / PEAK_FLOPS, (din * tiles + dout + ell_bytes) / HBM_BW)
+        te = min(cand.te or e, e)
+        tf = min(cand.tf or f, f)
+        halo_h = halo_extent(te, g.stride, g.r)
+        halo_w = halo_extent(tf, g.stride, g.s)
+        cells = ((e + te - 1) // te) * ((f + tf - 1) // tf)
+        din_staged = float(n * cells * c * halo_h * halo_w * itemsize)
+        return max(true_fl / PEAK_FLOPS, (din_staged + dout + ell_bytes) / HBM_BW)
     raise ValueError(cand.method)
 
 
@@ -115,7 +121,7 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
     if cand.method == "pallas":
         return (lambda x, e=ell: sparse_conv(
             x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
-            interpret=interpret)), ()
+            te=cand.te, tf=cand.tf, interpret=interpret)), ()
     raise ValueError(cand.method)
 
 

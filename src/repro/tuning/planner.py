@@ -67,7 +67,7 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
         if t < best_t:
             best, best_t = cd, t
     return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
-                     est_s=best_t,
+                     te=best.te, tf=best.tf, est_s=best_t,
                      source="measured" if mode == "wall" else "roofline")
 
 
@@ -141,10 +141,11 @@ def apply_plan_to_params(params: Dict[str, Any],
 
 def format_plan(plan: Dict[str, PlanEntry]) -> str:
     """Human-readable per-layer plan table (the paper's customization table)."""
-    lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'pad_to':>6} "
-             f"{'est_us':>10} source"]
+    lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'te':>4} {'tf':>4} "
+             f"{'pad_to':>6} {'est_us':>10} source"]
     for name, pe in plan.items():
         lines.append(
             f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
+            f"{pe.te or '-':>4} {pe.tf or '-':>4} "
             f"{pe.pad_to or '-':>6} {pe.est_s * 1e6:>10.1f} {pe.source}")
     return "\n".join(lines)

@@ -4,14 +4,18 @@ Escoin's speedups come from picking, per conv layer, the execution strategy
 and tile shape that fit that layer's geometry and sparsity.  This module
 enumerates the discrete choices the tuner measures over:
 
-  method  ∈ {dense, lowered, csr-direct, pallas}   (paper Figs. 8-11 columns)
-  tm      ∈ output-channel tiles that divide M and fit VMEM (pallas only)
-  pad_to  ∈ ELL row-padding buckets (K granularity; trades padded work for
-            jit-specialisation sharing)
+  method      ∈ {dense, lowered, csr-direct, pallas}  (paper Figs. 8-11 columns)
+  (tm,te,tf)  ∈ output-channel x output-spatial tilings whose halo'd input
+               block + value block + out tile fit the VMEM budget (pallas
+               only; te/tf = None means the untiled full-extent schedule)
+  pad_to      ∈ ELL row-padding buckets (K granularity; trades padded work
+               for jit-specialisation sharing)
 
-Hardware-infeasible points are pruned statically: the Pallas kernel requires
-stride == 1 and its packed index array must fit the SMEM budget; fully-dense
-layers (sparsity == 0) only ever run dense.
+Hardware-infeasible points are pruned statically: the Pallas kernel's packed
+index array must fit the SMEM budget, and every emitted tiling fits VMEM
+(``kernels.sparse_conv.ops.tile_candidates``).  Strided layers are eligible
+— the kernel applies the stride in-kernel.  Fully-dense layers
+(sparsity == 0) only ever run dense.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.kernels.sparse_conv.ops import SMEM_BUDGET, tm_candidates
+from repro.kernels.sparse_conv.ops import SMEM_BUDGET, tile_candidates
 
 METHODS = ("dense", "lowered", "csr-direct", "pallas")
 
@@ -27,6 +31,10 @@ METHODS = ("dense", "lowered", "csr-direct", "pallas")
 # granularity).  8 is the repo-wide default; 4 trims padded work on very
 # sparse rows; 16 shares jit specialisations across near-equal layers.
 PAD_TO_BUCKETS = (4, 8, 16)
+
+# Cap on pallas tilings enumerated per (layer, pad_to): tile_candidates is
+# preference-sorted, so the head of the list is the schedules worth measuring.
+MAX_TILINGS = 24
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,34 +89,43 @@ class ConvGeometry:
 class Candidate:
     """One point of the customization space.
 
-    tm is only meaningful for the pallas method; pad_to only for the sparse
+    tm/te/tf are only meaningful for the pallas method (te/tf = None means
+    the untiled full-extent spatial schedule); pad_to only for the sparse
     formats (lowered / csr-direct / pallas).
     """
 
     method: str
     tm: Optional[int] = None
     pad_to: Optional[int] = None
+    te: Optional[int] = None
+    tf: Optional[int] = None
 
     def to_dict(self) -> dict:
-        return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to}
+        return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
+                "te": self.te, "tf": self.tf}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
-        return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"))
+        return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
+                   te=d.get("te"), tf=d.get("tf"))
 
 
 def pallas_feasible(g: ConvGeometry, k: int) -> bool:
-    """The Pallas kernel is specialised for stride 1 and SMEM-resident indices."""
-    return g.stride == 1 and g.m * k * 4 <= SMEM_BUDGET
+    """The Pallas kernel needs SMEM-resident packed indices and at least one
+    VMEM-feasible (tm, te, tf) tiling.  Stride is handled in-kernel."""
+    if g.m * k * 4 > SMEM_BUDGET:
+        return False
+    return bool(tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride))
 
 
 def enumerate_candidates(g: ConvGeometry,
                          methods: Tuple[str, ...] = METHODS) -> List[Candidate]:
     """All statically-valid customization points for one layer.
 
-    Every emitted pallas ``tm`` divides M and fits the VMEM budget (via
-    ``kernels.sparse_conv.ops.tm_candidates`` — the heuristic the tuner
-    refines); every pallas candidate fits the SMEM budget.
+    Every emitted pallas ``(tm, te, tf)`` fits the VMEM budget (via
+    ``kernels.sparse_conv.ops.tile_candidates`` — the heuristic the tuner
+    refines; the list is preference-sorted and capped at MAX_TILINGS); every
+    pallas candidate fits the SMEM budget.
     """
     if g.sparsity <= 0.0:
         # Dense-kept layers (paper: conv1 et al.) have no sparse format.
@@ -122,7 +139,10 @@ def enumerate_candidates(g: ConvGeometry,
             out.append(Candidate("lowered", pad_to=pad_to))
         if "csr-direct" in methods:
             out.append(Candidate("csr-direct", pad_to=pad_to))
-        if "pallas" in methods and pallas_feasible(g, k):
-            for tm in tm_candidates(g.m, g.c, g.hp, g.wp, g.e, g.f, k):
-                out.append(Candidate("pallas", tm=tm, pad_to=pad_to))
+        if "pallas" in methods and g.m * k * 4 <= SMEM_BUDGET:
+            tilings = tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s,
+                                      g.stride)[:MAX_TILINGS]
+            for tm, te, tf in tilings:
+                out.append(Candidate("pallas", tm=tm, pad_to=pad_to,
+                                     te=te, tf=tf))
     return out

@@ -7,6 +7,8 @@ from repro.core import bcsr_from_dense, block_prune
 from repro.kernels.bsr_matmul.ops import bsr_matmul, choose_tb
 from repro.kernels.bsr_matmul.ref import bsr_matmul_ref
 
+pytestmark = pytest.mark.pallas
+
 CASES = [
     # (B, M, N, block, sparsity)
     (8, 64, 64, (16, 16), 0.5),

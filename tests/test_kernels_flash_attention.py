@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.kernel import flash_attention
+
+pytestmark = pytest.mark.pallas
 from repro.kernels.flash_attention.ops import flash_attention_bthd
 from repro.kernels.flash_attention.ref import attention_ref
 

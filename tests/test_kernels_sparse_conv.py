@@ -4,8 +4,14 @@ import numpy as np
 import pytest
 
 from repro.core import ell_from_dense_conv, magnitude_prune
-from repro.kernels.sparse_conv.ops import choose_tm, sparse_conv
+from repro.core.direct_conv import out_spatial
+from repro.kernels.sparse_conv import ops
+from repro.kernels.sparse_conv.ops import (choose_tiles, choose_tm,
+                                           sparse_conv, tile_candidates,
+                                           tm_candidates)
 from repro.kernels.sparse_conv.ref import sparse_conv_ref
+
+pytestmark = pytest.mark.pallas
 
 CASES = [
     # (N, C, H, W, M, R, pad, sparsity)
@@ -64,15 +70,133 @@ def test_kernel_channel_tiles(tm):
                                rtol=2e-5, atol=2e-5)
 
 
-def test_strided_fallback():
-    """stride > 1 uses the pure-JAX direct path (kernel customisation)."""
+def test_strided_runs_in_kernel(monkeypatch):
+    """stride > 1 now runs through the Pallas kernel (no pure-JAX fallback)."""
     rng = np.random.default_rng(13)
     x = jnp.asarray(rng.standard_normal((1, 3, 16, 16)).astype(np.float32))
     wt = np.asarray(magnitude_prune(
         jnp.asarray(rng.standard_normal((8, 3, 3, 3)).astype(np.float32)), 0.7))
     ell = ell_from_dense_conv(wt)
+    launches = []
+    real = ops.sparse_conv_pallas
+    monkeypatch.setattr(
+        ops, "sparse_conv_pallas",
+        lambda *a, **kw: launches.append(kw) or real(*a, **kw))
     got = sparse_conv(x, ell, stride=2, padding=1, interpret=True)
     ref = sparse_conv_ref(x, jnp.asarray(wt), stride=2, padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert launches and launches[0]["stride"] == 2
+
+
+# ---------------------------------------------------------------------------
+# spatial tiling: stride x padding grid, edge tiles, large feature maps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("pad", [0, 1, 2])
+def test_strided_tiled_parity(stride, pad):
+    """(stride, padding) grid through the spatially-tiled kernel with edge
+    tiles: te/tf deliberately do not divide E/F."""
+    n, c, h, w, m, r = 2, 3, 15, 13, 8, 3
+    rng = np.random.default_rng(100 * stride + pad)
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    te, tf = max(1, (e + 1) // 2), max(1, f // 2 + 1)   # non-dividing tiles
+    got = sparse_conv(x, ell, stride=stride, padding=pad,
+                      tm=4, te=te, tf=tf, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride", [2, 4])
+def test_strided_bf16(stride):
+    rng = np.random.default_rng(23 + stride)
+    x = jnp.asarray(rng.standard_normal((1, 4, 12, 12)), dtype=jnp.bfloat16)
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.8))
+    ell = ell_from_dense_conv(wt)
+    import dataclasses
+    ell = dataclasses.replace(ell, value=ell.value.astype(jnp.bfloat16))
+    got = sparse_conv(x, ell, stride=stride, padding=1, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), stride=stride, padding=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_large_feature_map_spatially_tiled():
+    """A feature map whose whole padded image busts the VMEM budget still
+    runs through the Pallas kernel via spatial tiling — the old kernel
+    refused it (and the [1]-fallback bug would have launched over budget)."""
+    n, c, h, w, m, r, pad = 1, 96, 192, 192, 8, 3, 1
+    hp = wp = h + 2 * pad
+    assert c * hp * wp * 4 > ops.VMEM_BUDGET  # genuinely oversized
+    rng = np.random.default_rng(31)
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), 0.95))
+    ell = ell_from_dense_conv(wt)
+    e, f = out_spatial(h, w, r, r, 1, pad)
+    # regression: the untiled ladder must report infeasible, not [1]
+    assert tm_candidates(m, c, hp, wp, e, f, ell.k) == []
+    tiles = choose_tiles(m, c, e, f, ell.k, r, r, 1)
+    assert tiles is not None and (tiles[1] < e or tiles[2] < f)
+    got = sparse_conv(x, ell, padding=pad, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=pad)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tm_candidates_over_budget_returns_empty():
+    """Regression: tm_candidates used to return [1] even when TM=1 busts
+    the VMEM budget, launching an over-budget kernel."""
+    assert tm_candidates(m=8, c=2048, hp=64, wp=64, e=62, f=62, k=64) == []
+
+
+def test_off_ladder_tm_honored(monkeypatch):
+    """A pinned tm that divides M but is not on the default ladder (e.g. 24
+    for M=48) must still launch the kernel, not silently fall back."""
+    rng = np.random.default_rng(41)
+    x = jnp.asarray(rng.standard_normal((1, 3, 8, 8)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((48, 3, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    launches = []
+    real = ops.sparse_conv_pallas
+    monkeypatch.setattr(
+        ops, "sparse_conv_pallas",
+        lambda *a, **kw: launches.append(kw) or real(*a, **kw))
+    got = sparse_conv(x, ell, tm=24, padding=1, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert launches and launches[0]["tm"] == 24
+
+
+def test_vmem_infeasible_falls_back_to_direct(monkeypatch):
+    """When no (tm, te, tf) tiling fits VMEM, sparse_conv must fall back to
+    the pure-JAX direct path instead of launching the kernel."""
+    rng = np.random.default_rng(37)
+    x = jnp.asarray(rng.standard_normal((1, 4, 10, 10)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    monkeypatch.setattr(ops, "_VMEM_BUDGET", 1024)
+    assert tile_candidates(8, 4, 8, 8, ell.k, 3, 3, 1) == []
+
+    def _boom(*a, **kw):
+        raise AssertionError("over-budget kernel launch")
+
+    monkeypatch.setattr(ops, "sparse_conv_pallas", _boom)
+    got = sparse_conv(x, ell, padding=1, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
 

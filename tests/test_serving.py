@@ -41,6 +41,65 @@ def test_batcher_rejects_oversize():
     b.submit(r)
     b.admit()
     assert r.done and b.active == 0
+    assert b.rejected == [r]
+
+
+def test_run_until_drained_surfaces_rejected_request():
+    """Regression: oversize rejections are popped from the queue at
+    admission, so sweeping only the queue silently dropped them from the
+    finished list."""
+    eng = _engine(n_slots=1, max_len=8)
+    r = Request(0, list(range(6)), max_new_tokens=8)  # 6 + 8 > 8: oversize
+    eng.submit(r)
+    done = eng.run_until_drained()
+    assert r in done and r.done and r.output == []
+
+
+def test_run_until_drained_mixes_rejected_and_served():
+    eng = _engine(n_slots=2, max_len=12)
+    ok = Request(0, [1, 2, 3], max_new_tokens=4)
+    oversize = Request(1, list(range(10)), max_new_tokens=8)
+    eng.submit(ok)
+    eng.submit(oversize)
+    done = eng.run_until_drained()
+    assert ok in done and len(ok.output) == 4
+    assert oversize in done and oversize.done and oversize.output == []
+    assert len(done) == 2  # no duplicates
+
+
+def test_staggered_admission_generates_full_budget():
+    """Regression: tick() snapped every slot's pos to the global max, so a
+    request admitted mid-stream jumped to the deepest slot's depth and
+    hit_cap retired it before it generated its full budget.  Now requests
+    that don't fit the cache depth remaining above the write cursor wait for
+    the batch to drain instead of being truncated."""
+    eng = _engine(n_slots=2, max_len=14)
+    r1 = Request(0, [1, 2, 3], max_new_tokens=8)
+    eng.submit(r1)
+    for _ in range(4):
+        eng.tick()
+    r2 = Request(1, [4, 5, 6], max_new_tokens=8)
+    eng.submit(r2)
+    eng.run_until_drained()
+    assert r1.done and len(r1.output) == 8
+    assert r2.done and len(r2.output) == 8
+
+
+def test_midstream_admission_when_capacity_allows():
+    """A request that fits the remaining cache depth is admitted mid-stream
+    (true continuous batching) and still generates its full budget; the
+    shared write cursor never regresses when the deeper slot retires."""
+    eng = _engine(n_slots=2, max_len=32)
+    r1 = Request(0, [1, 2, 3], max_new_tokens=10)
+    eng.submit(r1)
+    for _ in range(4):
+        eng.tick()
+    r2 = Request(1, [4, 5], max_new_tokens=4)  # 6 <= 32 - 4: fits mid-wave
+    eng.submit(r2)
+    eng.tick()
+    assert eng.batcher.active == 2  # genuinely admitted mid-stream
+    eng.run_until_drained()
+    assert len(r1.output) == 10 and len(r2.output) == 4
 
 
 def test_engine_serves_all_requests():
@@ -70,3 +129,23 @@ def test_engine_deterministic_per_request():
     eng2.submit(r_b)
     eng2.run_until_drained()
     assert r_a.output == r_solo.output
+
+
+def test_sparsify_params_converts_list_and_root_leaves():
+    """Regression: ``sparsify_params.visit`` only ran ``conv`` on
+    dict-valued parents, so leaves held in lists (and a bare pytree root)
+    were silently served dense."""
+    from repro.core.sparse_format import BcsrMatrix
+    from repro.launch.serve import sparsify_params
+
+    rng = np.random.default_rng(0)
+    w1 = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    w2 = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    tree = {"blocks": [{"proj": w1}, w2], "embed": w2}
+    out = sparsify_params(tree, None, 0.5)
+    assert isinstance(out["blocks"][0]["proj"], BcsrMatrix)
+    assert isinstance(out["blocks"][1], BcsrMatrix)   # list-held leaf
+    assert out["embed"] is w2                          # skip-name untouched
+    # a list at the pytree root converts too
+    out2 = sparsify_params([w1, w2], None, 0.5)
+    assert all(isinstance(v, BcsrMatrix) for v in out2)

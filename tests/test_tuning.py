@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
-                                           choose_tm, tm_candidates)
+                                           choose_tm, halo_extent,
+                                           tiling_fits, tm_candidates)
 from repro.models import cnn
 from repro.tuning import (Candidate, ConvGeometry, PlanCache, PlanEntry,
                           apply_plan_to_params, enumerate_candidates,
@@ -26,27 +27,47 @@ def _geom(**kw):
 # candidate space
 # ---------------------------------------------------------------------------
 
-def test_candidates_tm_divides_m_and_fits_budgets():
-    g = _geom()
-    cands = enumerate_candidates(g)
+def _assert_pallas_fits(g, cands):
+    """Every pallas candidate's (tm, te, tf) halo'd working set fits VMEM."""
     assert any(c.method == "pallas" for c in cands)
     for cd in cands:
         if cd.method != "pallas":
             continue
         assert g.m % cd.tm == 0
+        assert cd.te is not None and cd.tf is not None
         k = g.k_est(cd.pad_to)
-        x_bytes = g.c * g.hp * g.wp * 4
-        assert x_bytes + cd.tm * k * 4 + cd.tm * g.e * g.f * 4 <= VMEM_BUDGET
+        x_bytes = (g.c * halo_extent(cd.te, g.stride, g.r)
+                   * halo_extent(cd.tf, g.stride, g.s) * 4)
+        assert x_bytes + cd.tm * k * 4 + cd.tm * cd.te * cd.tf * 4 <= VMEM_BUDGET
+        assert tiling_fits(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
+                           cd.tm, cd.te, cd.tf)
         assert g.m * k * 4 <= SMEM_BUDGET
+
+
+def test_candidates_tiles_divide_m_and_fit_budgets():
+    g = _geom()
+    _assert_pallas_fits(g, enumerate_candidates(g))
 
 
 def test_dense_layer_space_is_dense_only():
     assert enumerate_candidates(_geom(sparsity=0.0)) == [Candidate("dense")]
 
 
-def test_strided_layer_has_no_pallas():
-    cands = enumerate_candidates(_geom(stride=2))
-    assert cands and all(c.method != "pallas" for c in cands)
+def test_strided_layer_has_pallas():
+    """Strided layers are pallas-eligible now — the kernel strides in-kernel."""
+    g = _geom(stride=2)
+    _assert_pallas_fits(g, enumerate_candidates(g))
+
+
+def test_large_map_layer_gets_spatially_tiled_pallas():
+    """A layer whose whole padded image busts VMEM still gets pallas
+    candidates — spatially tiled ones, all within budget."""
+    g = _geom(m=8, c=96, h=192, w=192, pad=1, sparsity=0.95)
+    assert g.c * g.hp * g.wp * 4 > VMEM_BUDGET
+    cands = enumerate_candidates(g)
+    _assert_pallas_fits(g, cands)
+    assert all(cd.te < g.e or cd.tf < g.f
+               for cd in cands if cd.method == "pallas")
 
 
 def test_smem_heavy_layer_has_no_pallas():
@@ -73,6 +94,16 @@ def test_roofline_pallas_tm_amortises_input():
     t1 = roofline_estimate(g, Candidate("pallas", tm=1, pad_to=8))
     t64 = roofline_estimate(g, Candidate("pallas", tm=64, pad_to=8))
     assert t64 <= t1
+
+
+def test_roofline_pallas_spatial_tiling_costs_halo():
+    """Smaller spatial tiles re-fetch halo rows: the untiled schedule must
+    score no worse than a tiled one on a memory-bound geometry that fits."""
+    g = _geom()
+    t_full = roofline_estimate(g, Candidate("pallas", tm=8, pad_to=8))
+    t_tiled = roofline_estimate(g, Candidate("pallas", tm=8, pad_to=8,
+                                             te=8, tf=8))
+    assert t_full <= t_tiled
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +142,33 @@ def test_plan_cache_version_guard(tmp_path):
     path.write_text('{"version": 999, "entries": {}}')
     with pytest.raises(ValueError):
         PlanCache(str(path))
+
+
+def test_plan_cache_v1_migration(tmp_path):
+    """v1 documents (no te/tf) load via migration: entries get te=tf=None —
+    the untiled schedule the v1 kernel ran — and re-save as the current
+    version."""
+    import json
+
+    from repro.tuning.cache import CACHE_VERSION
+
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps({
+        "version": 1,
+        "entries": {"k1": {"method": "pallas", "tm": 64, "pad_to": 8,
+                           "est_s": 1e-5, "source": "roofline"}}}))
+    cache = PlanCache(str(path))
+    pe = cache.get("k1")
+    assert pe == PlanEntry(method="pallas", tm=64, pad_to=8, te=None, tf=None,
+                           est_s=1e-5, source="roofline")
+    assert pe.candidate.te is None and pe.candidate.tf is None
+    out = tmp_path / "v2.json"
+    cache.save(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["version"] == CACHE_VERSION == 2
+    assert doc["entries"]["k1"]["te"] is None
+    # and the migrated file round-trips as current-version
+    assert PlanCache(str(out)).get("k1") == pe
 
 
 def test_wall_mode_measures_and_picks(tmp_path):
