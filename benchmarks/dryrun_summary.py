@@ -1,13 +1,25 @@
-"""Render the §Dry-run summary (compile proof + memory) for EXPERIMENTS.md."""
+"""Render the §Dry-run summary (compile proof + memory) for EXPERIMENTS.md,
+and (``--smoke``) a CI-sized regression check of the benchmark tables.
+
+The smoke mode exists so benchmark-table regressions — import errors in a
+figure module, renamed rows, a method column silently dropped — fail in CI
+instead of at paper-figure time: it imports every suite ``benchmarks.run``
+dispatches to, then runs the fig11 end-to-end table on a micro network
+(interpret-mode Pallas included) and checks the expected row names.
+
+  PYTHONPATH=src python -m benchmarks.dryrun_summary            # table
+  PYTHONPATH=src python -m benchmarks.dryrun_summary --smoke    # CI check
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 
 RESULTS = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
-def main() -> None:
+def render() -> None:
     rows = []
     for p in sorted(RESULTS.glob("*.json")):
         parts = p.stem.split("__")
@@ -26,6 +38,42 @@ def main() -> None:
               f"| {d.get('mem_temp_bytes', 0)/2**30:.2f} "
               f"| {sum(json.loads(json.dumps(d.get('coll_breakdown', {}))).values())/2**30:.2f} "
               f"| {'y' if d.get('probe_info') else '-'} |")
+
+
+def smoke() -> None:
+    """Import every benchmark suite and spot-check the fig11 table rows."""
+    # Import errors in any figure module fail here, like benchmarks.run would.
+    from benchmarks import (fig8_sparse_conv, fig9_breakdown,  # noqa: F401
+                            fig10_locality, fig11_end2end, fig12_autotune,
+                            kernels, roofline_table, run)
+    from repro.models import cnn
+
+    micro = [
+        cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+        cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu(),
+        cnn.Pool("gap"), cnn.FC("fc", 10),
+    ]
+    rows = fig11_end2end.bench_network("micro", micro, image=8, batch=1,
+                                       iters=1, pallas_iters=1)
+    names = {r.split(",")[0] for r in rows}
+    expect = {f"fig11/micro/{m}" for m in fig11_end2end.METHOD_ROWS}
+    missing = expect - names
+    if missing:
+        raise SystemExit(f"benchmark smoke: missing fig11 rows {sorted(missing)}")
+    for r in rows:
+        print(r)
+    print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI regression check of the benchmark tables")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        render()
 
 
 if __name__ == "__main__":

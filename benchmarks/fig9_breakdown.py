@@ -1,6 +1,12 @@
 """Paper Fig. 9: execution-time breakdown of sparse CONV layers into their
 component kernels: im2col / GEMM-or-SpMM (lowering path) vs pad_in / sconv
-(Escoin path)."""
+(Escoin path), plus the epilogue passes (bias/ReLU/shortcut) the engine's
+fused Pallas path folds into the conv itself.
+
+Geometries come from the engine's single lowering pass (``repro.engine``) —
+one ``ConvOp`` per conv with its input shape and fused-epilogue signature
+statically resolved.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,9 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import (dense_conv, direct_sparse_conv, ell_matmul, im2col)
-from repro.models import cnn
 from benchmarks.fig8_sparse_conv import SCALES
+from repro.core import (direct_sparse_conv, ell_matmul, im2col)
+from repro.engine import lower
+from repro.kernels.sparse_conv.ops import apply_epilogue
+from repro.models import cnn
 
 
 def bench_model(name: str) -> List[str]:
@@ -21,16 +29,16 @@ def bench_model(name: str) -> List[str]:
     net = cnn.NETWORKS[name]()
     rng = np.random.default_rng(0)
     params = cnn.init_cnn(net, 3, rng, image)
-    shapes = cnn.conv_layer_shapes(net, 3, image)
-    t_im2col = t_spmm = t_pad = t_sconv = t_gemm = 0.0
-    for layer, (c, h, w) in shapes:
-        if layer.sparsity == 0:
+    program = lower(net, (3, image, image))
+    t_im2col = t_spmm = t_pad = t_sconv = t_gemm = t_epi = 0.0
+    for op in program.conv_ops:
+        if op.sparsity == 0:
             continue
-        x = jnp.asarray(rng.standard_normal((batch, c, h, w)).astype(np.float32))
-        entry = params[layer.name]
+        x = jnp.asarray(rng.standard_normal((batch, op.c, op.h, op.w))
+                        .astype(np.float32))
+        entry = params[op.name]
         jim2col = jax.jit(functools.partial(
-            im2col, r=layer.k, s=layer.k, stride=layer.stride,
-            padding=layer.pad))
+            im2col, r=op.k, s=op.k, stride=op.stride, padding=op.pad))
         cols = jim2col(x)
         t_im2col += time_fn(jim2col, x, warmup=1, iters=3)
         # csrmm on the lowered matrix
@@ -42,20 +50,35 @@ def bench_model(name: str) -> List[str]:
             jax.jit(lambda cc, ww: jnp.einsum("npk,mk->nmp", cc, ww)),
             cols, wmat, warmup=1, iters=3)
         # escoin: pad_in + sconv
-        pad = layer.pad
+        pad = op.pad
         jpad = jax.jit(lambda xx: jnp.pad(
             xx, ((0, 0), (0, 0), (pad, pad), (pad, pad))))
         t_pad += time_fn(jpad, x, warmup=1, iters=3)
         t_sconv += time_fn(
-            jax.jit(functools.partial(direct_sparse_conv, stride=layer.stride,
-                                      padding=layer.pad)),
+            jax.jit(functools.partial(direct_sparse_conv, stride=op.stride,
+                                      padding=op.pad)),
             x, entry["ell"], warmup=1, iters=3)
+        # epilogue: the unfused bias / ReLU (/ shortcut) passes over the conv
+        # output — exactly the HBM traffic the fused Pallas epilogue removes.
+        # The shortcut stand-in is a *distinct* tensor: aliasing it to the
+        # output would hide the extra HBM read being measured.
+        y = jnp.asarray(rng.standard_normal((batch, op.m, op.e, op.f))
+                        .astype(np.float32))
+        res = (jnp.asarray(rng.standard_normal((batch, op.m, op.e, op.f))
+                           .astype(np.float32))
+               if op.res is not None else None)
+        t_epi += time_fn(
+            jax.jit(lambda yy, bb=entry["b"], rr=res, relu=op.fuse_relu:
+                    apply_epilogue(yy, bb, relu, rr)),
+            y, warmup=1, iters=3)
     return [
         row(f"fig9/{name}/im2col", t_im2col, "shared by CUBLAS+CUSPARSE paths"),
         row(f"fig9/{name}/sgemm", t_gemm, "CUBLAS core"),
         row(f"fig9/{name}/csrmm", t_spmm, "CUSPARSE core"),
         row(f"fig9/{name}/pad_in", t_pad, "Escoin pad"),
         row(f"fig9/{name}/sconv", t_sconv, "Escoin core"),
+        row(f"fig9/{name}/epilogue", t_epi,
+            "bias/ReLU/shortcut passes; fused in-kernel by the engine"),
     ]
 
 

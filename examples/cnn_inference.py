@@ -1,16 +1,23 @@
 """The paper's scenario end-to-end: pruned-CNN inference through Escoin vs
-the lowering baselines, per-layer and whole-network.
+the lowering baselines, per-layer and whole-network, on the compile-once
+graph engine.
+
+The nested spec is lowered once into a flat op program (with conv epilogues
+fused at lowering time), a ``CnnEngine`` binds the pruned weights, and each
+method runs through the engine's cached jit.
 
   PYTHONPATH=src python examples/cnn_inference.py --net alexnet --image 99
+  PYTHONPATH=src python examples/cnn_inference.py --net resnet50 \
+      --methods dense,csr-direct,auto
 """
 import argparse
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine import CnnEngine, lower
 from repro.models import cnn
 
 
@@ -19,24 +26,28 @@ def main() -> None:
     ap.add_argument("--net", default="alexnet", choices=list(cnn.NETWORKS))
     ap.add_argument("--image", type=int, default=99)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--methods", default="dense,lowered,csr-direct",
+                    help="comma-separated subset of "
+                         "dense,lowered,csr-direct,pallas,auto "
+                         "(pallas runs interpret-mode off-TPU)")
     args = ap.parse_args()
 
     net = cnn.NETWORKS[args.net]()
     rng = np.random.default_rng(0)
+    program = lower(net, (3, args.image, args.image))
     params = cnn.init_cnn(net, 3, rng, args.image)
+    engine = CnnEngine(program, params)
     x = jnp.asarray(rng.standard_normal(
         (args.batch, 3, args.image, args.image)).astype(np.float32))
 
-    print(f"{args.net}: {len(cnn.conv_layer_shapes(net, 3, args.image))} conv "
-          f"layers, image {args.image}, batch {args.batch}")
+    print(f"{args.net}: lowered once -> {program.summary()}; "
+          f"image {args.image}, batch {args.batch}")
     ref = None
-    for method in ("dense", "lowered", "csr-direct"):
-        fn = jax.jit(functools.partial(cnn.cnn_forward, net, params,
-                                       method=method))
-        out = jax.block_until_ready(fn(x))          # compile
+    for method in args.methods.split(","):
+        out = jax.block_until_ready(engine(x, method))   # compile
         t0 = time.perf_counter()
         for _ in range(3):
-            out = jax.block_until_ready(fn(x))
+            out = jax.block_until_ready(engine(x, method))
         dt = (time.perf_counter() - t0) / 3
         if ref is None:
             ref = np.asarray(out)

@@ -1,0 +1,24 @@
+"""Compile-once CNN graph engine.
+
+``lower(net, in_shape)`` walks a nested layer spec exactly once and emits a
+flat, typed op program with all geometries resolved statically and conv
+epilogues (bias/ReLU/bottleneck shortcut) fused at lowering time;
+``CnnEngine`` binds params + a tuned plan to that program and executes via
+a cached ``jax.jit`` per (method, geometry).
+
+  spec     -- the layer-spec vocabulary (Conv/Pool/FC/Concat/Residual/Relu)
+  program  -- the op set (ConvOp/PoolOp/FCOp/ConcatOp/ResidualAddOp/ReluOp)
+  lower    -- the single spec walker (replaces the four historical ones)
+  engine   -- CnnEngine + bind-time parameter init
+"""
+from repro.engine.engine import CnnEngine, METHODS, init_conv_params
+from repro.engine.lower import lower
+from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
+                                  ReluOp, ResidualAddOp)
+from repro.engine.spec import FC, Concat, Conv, Pool, Relu, Residual
+
+__all__ = [
+    "CnnEngine", "Concat", "ConcatOp", "Conv", "ConvOp", "FC", "FCOp",
+    "METHODS", "Pool", "PoolOp", "Program", "Relu", "ReluOp", "Residual",
+    "ResidualAddOp", "init_conv_params", "lower",
+]

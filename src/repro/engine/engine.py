@@ -1,0 +1,207 @@
+"""CnnEngine: bind params + a tuned plan to a lowered program and execute.
+
+The compile-once executor: a :class:`~repro.engine.program.Program` (from
+``lower()``) plus a parameter dict plus an optional tuned plan, executed
+through a cached ``jax.jit`` per (method, input geometry, fuse override).
+Nothing here walks the nested spec and nothing mutates ``params`` inside a
+trace — FC weights are created once at *bind* time from each ``FCOp``'s
+statically-resolved fan-in.
+
+Conv epilogues (``bias → ReLU`` and bottleneck ``bias → +shortcut → ReLU``)
+were fused into ``ConvOp`` at lowering time; for the Pallas method they are
+executed *in-kernel* (one output write from the f32 accumulator instead of
+three HBM passes), for the other methods as the same unfused op sequence
+the pre-engine executor ran — bit-for-bit compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.direct_conv import dense_conv, direct_sparse_conv
+from repro.core.lowering import lowered_sparse_conv
+from repro.core.pruning import magnitude_prune
+from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
+                                  ReluOp, ResidualAddOp)
+from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
+
+METHODS = ("dense", "lowered", "csr-direct", "pallas", "auto")
+
+
+def init_conv_params(program: Program, rng: np.random.Generator,
+                     ) -> Dict[str, Any]:
+    """Random pruned weights for every conv of a lowered program.
+
+    Draws in ``conv_table`` (historical spec-walk) order, then one integer
+    for the FC weight stream, so the result is bit-identical to the
+    pre-engine ``init_cnn``.
+    """
+    params: Dict[str, Any] = {}
+    for l, (c, _, _) in program.conv_table:
+        w = (rng.standard_normal((l.out_c, c, l.k, l.k))
+             .astype(np.float32) * (2.0 / (c * l.k * l.k)) ** 0.5)
+        if l.sparsity > 0:
+            w = np.asarray(magnitude_prune(jnp.asarray(w), l.sparsity))
+        entry = {"w": jnp.asarray(w), "b": jnp.zeros((l.out_c,), jnp.float32)}
+        if l.sparsity > 0:
+            entry["ell"] = ell_from_dense_conv(w)
+            entry["ell2d"] = ell_from_dense(w.reshape(l.out_c, -1))
+        params[l.name] = entry
+    params["_fc_rng"] = rng.integers(0, 2**31)
+    return params
+
+
+def _pool(op: PoolOp, x: jax.Array) -> jax.Array:
+    if op.kind == "gap":
+        return x.mean(axis=(2, 3), keepdims=True)
+    init = -jnp.inf if op.kind == "max" else 0.0
+    red = jax.lax.max if op.kind == "max" else jax.lax.add
+    y = jax.lax.reduce_window(
+        x, init, red, (1, 1, op.k, op.k), (1, 1, op.stride, op.stride),
+        ((0, 0), (0, 0), (op.pad, op.pad), (op.pad, op.pad)))
+    if op.kind == "avg":
+        y = y / (op.k * op.k)
+    return y
+
+
+class CnnEngine:
+    """Program + params (+ plan) -> cached-jit executor.
+
+    ``engine(x, method=...)`` compiles once per (method, input shape/dtype,
+    fuse override) and replays the compiled program afterwards.  ``plan``
+    is a ``{layer_name: PlanEntry}`` table from ``repro.tuning``; with
+    ``method="auto"`` and no plan bound, a roofline-mode plan is computed
+    per batch size on first use.
+
+    ``fuse=None`` (default) fuses the Pallas epilogue in-kernel (and honors
+    each plan entry's ``fuse`` flag under ``method="auto"``); ``fuse=False``
+    forces the unfused three-pass epilogue — the benchmark baseline.
+    """
+
+    def __init__(self, program: Program, params: Dict[str, Any],
+                 plan: Optional[Dict[str, Any]] = None):
+        self.program = program
+        self.params = params
+        self.plan = plan
+        self.fc_weights = self._bind_fc(program, params)
+        self._fns: Dict[Any, Any] = {}
+        self._auto_plans: Dict[int, Dict[str, Any]] = {}
+
+    # -- bind -------------------------------------------------------------
+
+    @staticmethod
+    def _bind_fc(program: Program, params: Dict[str, Any],
+                 ) -> Dict[Any, np.ndarray]:
+        """FC weights, created here (not by mutating ``params`` mid-trace).
+
+        Keyed on ``(name, in_f)`` and drawn in program order from the
+        ``_fc_rng`` seed — the same stream positions the historical lazy
+        creation used on a fresh params dict, so two engines bound at
+        different image sizes get identical weights for every FC layer
+        whose fan-in agrees, and can never collide when fan-ins differ.
+        """
+        rng = np.random.default_rng(int(params.get("_fc_rng", 0)))
+        out: Dict[Any, np.ndarray] = {}
+        for op in program.fc_ops:
+            out[(op.name, op.in_f)] = (
+                rng.standard_normal((op.in_f, op.out_f))
+                .astype(np.float32) * (1.0 / op.in_f) ** 0.5)
+        return out
+
+    def _auto_plan(self, batch: int) -> Dict[str, Any]:
+        plan = self._auto_plans.get(batch)
+        if plan is None:
+            from repro.tuning.planner import plan_program  # lazy: avoids cycle
+            plan = plan_program(self.program, batch=batch, mode="roofline")
+            self._auto_plans[batch] = plan
+        return plan
+
+    # -- execute ----------------------------------------------------------
+
+    def _conv(self, op: ConvOp, x: jax.Array, res: Optional[jax.Array],
+              method: str, plan, fuse_override: Optional[bool]) -> jax.Array:
+        entry = self.params[op.name]
+        tm = te = tf = None
+        fuse = True if fuse_override is None else fuse_override
+        if method == "auto":
+            pe = (plan or {}).get(op.name)
+            method = pe.method if pe is not None else "dense"
+            if pe is not None:
+                tm, te, tf = pe.tm, pe.te, pe.tf
+                if fuse_override is None:
+                    fuse = pe.fuse
+            ell = entry.get("ell_auto", entry.get("ell"))
+            ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
+        else:
+            ell, ell2d = entry.get("ell"), entry.get("ell2d")
+        b = entry["b"]
+        if op.sparsity == 0 or method == "dense":
+            y = dense_conv(x, entry["w"], stride=op.stride, padding=op.pad)
+        elif method == "lowered":
+            y = lowered_sparse_conv(x, ell2d, op.k, op.k,
+                                    stride=op.stride, padding=op.pad)
+        elif method == "csr-direct":
+            y = direct_sparse_conv(x, ell, stride=op.stride, padding=op.pad)
+        elif method == "pallas":
+            interp = jax.default_backend() != "tpu"
+            if fuse:
+                return pallas_sparse_conv(
+                    x, ell, stride=op.stride, padding=op.pad, tm=tm, te=te,
+                    tf=tf, bias=b, fuse_relu=op.fuse_relu, residual=res,
+                    interpret=interp)
+            y = pallas_sparse_conv(x, ell, stride=op.stride, padding=op.pad,
+                                   tm=tm, te=te, tf=tf, interpret=interp)
+        else:
+            raise ValueError(method)
+        # Unfused epilogue: the exact op sequence of the pre-engine executor.
+        y = y + b[None, :, None, None]
+        if res is not None:
+            y = y + res
+        if op.fuse_relu:
+            y = jax.nn.relu(y)
+        return y
+
+    def _execute(self, x: jax.Array, *, method: str, plan,
+                 fuse_override: Optional[bool]) -> jax.Array:
+        vals: Dict[int, jax.Array] = {0: x}
+        for op in self.program.ops:
+            if isinstance(op, ConvOp):
+                res = vals[op.res] if op.res is not None else None
+                vals[op.out] = self._conv(op, vals[op.src], res, method, plan,
+                                          fuse_override)
+            elif isinstance(op, ReluOp):
+                vals[op.out] = jax.nn.relu(vals[op.src])
+            elif isinstance(op, PoolOp):
+                vals[op.out] = _pool(op, vals[op.src])
+            elif isinstance(op, ConcatOp):
+                vals[op.out] = jnp.concatenate([vals[s] for s in op.srcs],
+                                               axis=1)
+            elif isinstance(op, ResidualAddOp):
+                y = vals[op.a] + vals[op.b]
+                vals[op.out] = jax.nn.relu(y) if op.fuse_relu else y
+            elif isinstance(op, FCOp):
+                flat = vals[op.src].reshape(vals[op.src].shape[0], -1)
+                vals[op.out] = flat @ self.fc_weights[(op.name, op.in_f)]
+            else:
+                raise TypeError(f"unknown op {op!r}")
+        return vals[self.program.out]
+
+    def __call__(self, x: jax.Array, method: str = "dense", *,
+                 fuse: Optional[bool] = None) -> jax.Array:
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+        plan = self.plan
+        if method == "auto" and plan is None:
+            plan = self._auto_plan(int(x.shape[0]))
+        key = (method, tuple(x.shape), str(x.dtype), fuse, id(plan))
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                self._execute, method=method, plan=plan, fuse_override=fuse))
+            self._fns[key] = fn
+        return fn(x)

@@ -44,6 +44,15 @@ Index packing: each nonzero's (c, r, s) is packed into one int32 as
 kernel decodes with two divmods (scalar ALU, off the critical VPU path).
 This is exactly the paper's *weight stretching* trade-off: more index
 arithmetic in exchange for fewer memory bytes.
+
+Fused epilogue: the per-channel bias rides along as a third scalar-prefetch
+operand (f32 in SMEM, one scalar per output channel) and is added to the f32
+accumulator before the single output write; a static ``fuse_relu`` flag
+clamps the accumulator in-register, and an optional residual operand —
+blocked exactly like the output tile — is accumulated for bottleneck tails
+(``conv → bias → +shortcut → ReLU``).  Compared to the unfused executor this
+removes two to three extra HBM round-trips of the full output tensor: the
+accumulator leaves VMEM exactly once, epilogue applied.
 """
 from __future__ import annotations
 
@@ -56,13 +65,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
+def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
             x_ref,                       # HBM/ANY: halo-padded input
             val_ref,                     # VMEM in
-            out_ref,                     # VMEM out
-            xblk_ref, sem,               # VMEM scratch + DMA semaphore
-            *, tm: int, rs: int, s: int, stride: int, te: int, tf: int,
-            halo_h: int, halo_w: int):
+            *rest,                       # [res_ref,] out_ref, scratch, sem
+            tm: int, rs: int, s: int, stride: int, te: int, tf: int,
+            halo_h: int, halo_w: int, fuse_relu: bool, has_res: bool):
+    if has_res:
+        res_ref, out_ref, xblk_ref, sem = rest
+    else:
+        res_ref = None
+        out_ref, xblk_ref, sem = rest
     ni = pl.program_id(0)
     et = pl.program_id(1)
     ft = pl.program_id(2)
@@ -101,6 +114,13 @@ def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
         acc0 = jnp.zeros((te, tf), dtype=jnp.float32)
         # CSR semantics: iterate only this row's true nonzeros.
         acc = lax.fori_loop(0, nnz_ref[m], body, acc0)
+        # Fused epilogue on the in-register f32 accumulator: one output
+        # write instead of separate bias / residual / ReLU HBM passes.
+        acc = acc + bias_ref[m]
+        if has_res:
+            acc = acc + res_ref[0, ml, :, :].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
         out_ref[0, ml, :, :] = acc
         return 0
 
@@ -110,11 +130,13 @@ def _kernel(idx_ref, nnz_ref,            # scalar prefetch (SMEM)
 @functools.partial(
     jax.jit,
     static_argnames=("tm", "k", "rs", "s", "e", "f", "stride", "te", "tf",
-                     "interpret"))
+                     "fuse_relu", "interpret"))
 def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
-                       nnz: jax.Array, *, tm: int, k: int, rs: int, s: int,
-                       e: int, f: int, stride: int = 1, te: int | None = None,
-                       tf: int | None = None,
+                       nnz: jax.Array, bias: jax.Array,
+                       residual: jax.Array | None = None, *, tm: int, k: int,
+                       rs: int, s: int, e: int, f: int, stride: int = 1,
+                       te: int | None = None, tf: int | None = None,
+                       fuse_relu: bool = False,
                        interpret: bool = False) -> jax.Array:
     """Launch the spatially-tiled direct sparse conv kernel.
 
@@ -123,12 +145,18 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
       value:      (M, K) ELL values.
       packed_idx: (M, K) int32, c*(R*S) + r*S + s.
       nnz:        (M,) int32 true row lengths.
+      bias:       (M,) f32 per-channel bias, added to the f32 accumulator
+                  in-kernel (pass zeros for a bias-free conv — the add is
+                  then a bitwise no-op).
+      residual:   optional (N, M, E, F) shortcut accumulated before the ReLU
+                  (bottleneck tail), blocked like the output tile.
       tm:         output-channel tile (VMEM/occupancy knob).
       e, f:       output spatial dims ((Hp - R) // stride + 1 etc.).
       stride:     conv stride (>= 1), applied in-kernel.
       te, tf:     output spatial tile dims (default: whole output, i.e. the
                   untiled schedule).  Need not divide e/f — edge tiles are
                   handled by ceiling-division grids + masked writes.
+      fuse_relu:  clamp the accumulator in-kernel (the fused epilogue).
 
     Returns: (N, M, E, F) float32.
     """
@@ -150,20 +178,27 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
         xpad = jnp.pad(xpad, ((0, 0), (0, 0), (0, max(0, need_h - hp)),
                               (0, max(0, need_w - wp))))
     grid = (n, et_n, ft_n, m // tm)
+    has_res = residual is not None
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((tm, k), lambda ni, et, ft, mt, *_: (mt, 0)),
+    ]
+    inputs = [packed_idx, nnz, bias, xpad, value]
+    if has_res:
+        in_specs.append(pl.BlockSpec(
+            (1, tm, te, tf), lambda ni, et, ft, mt, *_: (ni, mt, et, ft)))
+        inputs.append(residual)
     return pl.pallas_call(
         functools.partial(_kernel, tm=tm, rs=rs, s=s, stride=stride,
-                          te=te, tf=tf, halo_h=halo_h, halo_w=halo_w),
+                          te=te, tf=tf, halo_h=halo_h, halo_w=halo_w,
+                          fuse_relu=fuse_relu, has_res=has_res),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                pl.BlockSpec((tm, k),
-                             lambda ni, et, ft, mt, idx, nnz_: (mt, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, tm, te, tf),
-                lambda ni, et, ft, mt, idx, nnz_: (ni, mt, et, ft)),
+                lambda ni, et, ft, mt, *_: (ni, mt, et, ft)),
             scratch_shapes=[
                 pltpu.VMEM((c, halo_h, halo_w), xpad.dtype),
                 pltpu.SemaphoreType.DMA,
@@ -171,4 +206,4 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
         ),
         out_shape=jax.ShapeDtypeStruct((n, m, e, f), jnp.float32),
         interpret=interpret,
-    )(packed_idx, nnz, xpad, value)
+    )(*inputs)

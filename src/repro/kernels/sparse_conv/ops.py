@@ -3,8 +3,12 @@
 Handles: input padding (pad_in), index packing, tile selection — output
 channels ``tm`` and output spatial tiles ``(te, tf)``, the paper's
 kernel-customisation table — dtype policy (bf16/f32 in, f32 accumulate),
-and the fallback to the pure-JAX direct path for layers whose packed index
-array busts the SMEM budget or for which no VMEM-feasible tiling exists.
+the fused epilogue (bias / ReLU / bottleneck residual applied to the f32
+accumulator in-kernel, one output write instead of three HBM passes), and
+the fallback to the pure-JAX direct path for layers whose packed index
+array busts the SMEM budget or for which no VMEM-feasible tiling exists —
+the fallback applies the same epilogue unfused, so ``sparse_conv`` is a
+complete conv+epilogue operator either way.
 
 Strided layers and feature maps larger than VMEM run through the Pallas
 kernel: the kernel tiles the output spatially with halo'd input blocks and
@@ -26,7 +30,7 @@ from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 # VMEM budget the autotuner packs blocks into (bytes).  v5e has ~16 MiB of
 # VMEM per core; leave headroom for Mosaic's own buffers and semaphores.
 _VMEM_BUDGET = 12 * 1024 * 1024
-# SMEM budget for the scalar-prefetched packed index array.
+# SMEM budget for the scalar-prefetched packed index array + f32 bias row.
 _SMEM_BUDGET = 2 * 1024 * 1024
 
 # Public aliases consumed by repro.tuning (candidate-space pruning).
@@ -41,6 +45,11 @@ _SPATIAL_LADDER = (128, 64, 32, 16, 8)
 def halo_extent(t: int, stride: int, r: int) -> int:
     """Input rows/cols one output tile of ``t`` positions touches."""
     return (t - 1) * stride + r
+
+
+def smem_fits(m: int, k: int) -> bool:
+    """Packed indices (M*K int32) + per-channel f32 bias fit the SMEM budget."""
+    return m * k * 4 + m * 4 <= _SMEM_BUDGET
 
 
 def spatial_candidates(e: int) -> List[int]:
@@ -75,18 +84,23 @@ def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
 
 
 def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
-                stride: int, tm: int, te: int, tf: int) -> bool:
+                stride: int, tm: int, te: int, tf: int,
+                fuse_res: bool = False) -> bool:
     """Whether one (tm, te, tf) tiling's working set — halo'd input block +
-    value block + f32 out tile — fits the VMEM budget."""
+    value block + f32 out tile (+ the residual input tile when the fused
+    epilogue accumulates a shortcut) — fits the VMEM budget."""
     if tm < 1 or m % tm:
         return False
     x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
-    return x_bytes + tm * k * 4 + tm * te * tf * 4 <= _VMEM_BUDGET
+    out_bytes = tm * te * tf * 4
+    res_bytes = out_bytes if fuse_res else 0
+    return x_bytes + tm * k * 4 + out_bytes + res_bytes <= _VMEM_BUDGET
 
 
 def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                     stride: int = 1,
                     tms: Optional[Tuple[int, ...]] = None,
+                    fuse_res: bool = False,
                     ) -> List[Tuple[int, int, int]]:
     """All (tm, te, tf) tilings whose VMEM working set fits, preferred first.
 
@@ -94,13 +108,15 @@ def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     total staged input traffic, then largest tm — so when the whole image
     fits, the first candidate is the old untiled schedule with the largest
     feasible channel tile.  ``tms`` overrides the channel-tile ladder (e.g.
-    a caller-pinned tm that the ladder doesn't contain).
+    a caller-pinned tm that the ladder doesn't contain); ``fuse_res``
+    reserves VMEM for the fused epilogue's residual input tile.
     """
     out: List[Tuple[int, int, int]] = []
     for te in spatial_candidates(e):
         for tf in spatial_candidates(f):
             for tm in (tms or _TM_LADDER):
-                if tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf):
+                if tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                               fuse_res=fuse_res):
                     out.append((tm, te, tf))
 
     def pref(cand: Tuple[int, int, int]) -> Tuple[int, int, int]:
@@ -143,37 +159,68 @@ def pack_indices(ell: EllConv) -> jax.Array:
     return (ell.cidx * (r * s) + ell.ridx * s + ell.sidx).astype(jnp.int32)
 
 
+def apply_epilogue(y: jax.Array, bias: Optional[jax.Array],
+                   fuse_relu: bool,
+                   residual: Optional[jax.Array]) -> jax.Array:
+    """The unfused conv epilogue: same math as the kernel's fused one,
+    applied as separate ops on the f32 result, then cast back to the input
+    dtype.  The single definition the fallback path, the wall-clock
+    runners, and the benchmark epilogue rows all share."""
+    dtype = y.dtype
+    y = y.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :, None, None]
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if fuse_relu:
+        y = jax.nn.relu(y)
+    return y.astype(dtype)
+
+
 def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
                 padding: int = 0, tm: Optional[int] = None,
                 te: Optional[int] = None, tf: Optional[int] = None,
+                bias: Optional[jax.Array] = None, fuse_relu: bool = False,
+                residual: Optional[jax.Array] = None,
                 interpret: bool = False) -> jax.Array:
-    """Direct sparse convolution, Pallas-accelerated where feasible.
+    """Direct sparse convolution + fused epilogue, Pallas-accelerated.
 
     (N, C, H, W) input, ELL filter bank for (M, C, R, S) weights ->
     (N, M, E, F) in x.dtype.  Any stride >= 1 runs in-kernel; tm/te/tf
     default to the static heuristic (``choose_tiles``) and are the knobs
-    the ``repro.tuning`` autotuner turns.  Falls back to the pure-JAX
-    direct path only when the packed index array busts the SMEM budget or
-    no VMEM-feasible tiling exists.
+    the ``repro.tuning`` autotuner turns.  ``bias`` (per-channel),
+    ``fuse_relu`` and ``residual`` (a shortcut tensor shaped like the
+    output) execute in-kernel on the f32 accumulator so the output is
+    written to HBM exactly once.  Falls back to the pure-JAX direct path —
+    with the identical epilogue applied unfused — only when the packed
+    index array busts the SMEM budget or no VMEM-feasible tiling exists.
     """
     m, c, r, s = ell.shape
     k = ell.k
-    if m * k * 4 > _SMEM_BUDGET:
+
+    def fallback() -> jax.Array:
+        y = direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        return apply_epilogue(y, bias, fuse_relu, residual)
+
+    if not smem_fits(m, k):
         # Index-heavy layers: packed indices cannot be scalar-prefetched.
-        return direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        return fallback()
     n, _, h, w = x.shape
     e, f = out_spatial(h, w, r, s, stride, padding)
+    fuse_res = residual is not None
     if tm is not None and te is not None and tf is not None:
         # Fully-specified tiling (tuned plan / caller override): honor it
         # when it fits, never launch an over-budget kernel.
         te, tf = min(te, e), min(tf, f)
-        if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf):
-            return direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                           fuse_res=fuse_res):
+            return fallback()
     else:
         # A pinned tm need not sit on the default ladder (e.g. tm=24 for
         # m=48): enumerate spatial tiles for exactly that tm.
         cands = tile_candidates(m, c, e, f, k, r, s, stride,
-                                tms=None if tm is None else (tm,))
+                                tms=None if tm is None else (tm,),
+                                fuse_res=fuse_res)
         if te is not None:
             cands = [t for t in cands if t[1] == min(te, e)]
         if tf is not None:
@@ -181,13 +228,15 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
         if not cands:
             # No in-budget tiling (or the requested one is infeasible): use
             # the XLA-scheduled direct path.
-            return direct_sparse_conv(x, ell, stride=stride, padding=padding)
+            return fallback()
         tm, te, tf = cands[0]
     xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    b = (jnp.zeros((m,), jnp.float32) if bias is None
+         else jnp.asarray(bias, jnp.float32))
     out = sparse_conv_pallas(
-        xpad, ell.value, pack_indices(ell), ell.nnz,
+        xpad, ell.value, pack_indices(ell), ell.nnz, b, residual,
         tm=tm, k=k, rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
-        interpret=interpret)
+        fuse_relu=fuse_relu, interpret=interpret)
     return out.astype(x.dtype)
 
 

@@ -66,9 +66,12 @@ def sparsify_params(params, cfg, sparsity: float, block=(16, 16), min_dim=64):
 
 
 def autotune_main(args) -> None:
-    """CNN autotune flow: plan -> persist -> reload round-trip -> numeric check."""
+    """CNN autotune flow: lower -> plan -> persist -> reload round-trip ->
+    numeric check, all on the compile-once graph engine."""
+    from repro.engine import CnnEngine, lower
     from repro.models import cnn
-    from repro.tuning import PlanCache, apply_plan_to_params, format_plan, plan_network
+    from repro.tuning import (PlanCache, apply_plan_to_params, format_plan,
+                              plan_program)
 
     name = args.cnn
     net = cnn.NETWORKS[name]()
@@ -80,16 +83,19 @@ def autotune_main(args) -> None:
     if mode == "wall":
         params = cnn.init_cnn(net, 3, rng, image)
 
+    program = lower(net, (3, image, image))
     cache = PlanCache(args.plan_cache)
-    plan = plan_network(net, 3, image, batch=1, mode=mode,
-                        cache=cache, params=params)
-    print(f"tuned {name} @ {image}px: {len(plan)} conv layers, "
+    plan = plan_program(program, batch=1, mode=mode, cache=cache,
+                        params=params)
+    fused = sum(pe.method == "pallas" and pe.fuse for pe in plan.values())
+    print(f"tuned {name} @ {image}px: {program.summary()}; "
+          f"{len(plan)} conv layers ({fused} fused-epilogue pallas), "
           f"{len(cache)} cache entries -> {args.plan_cache}")
     print(format_plan(plan))
 
     # Round-trip: a fresh cache loaded from disk must reproduce the plan
     # without re-tuning (every layer a hit).
-    replan = plan_network(net, 3, image, batch=1, mode=mode,
+    replan = plan_program(program, batch=1, mode=mode,
                           cache=PlanCache(args.plan_cache), params=params)
     assert replan == plan, "plan cache reload did not reproduce the plan"
     print(f"plan cache round-trip ok ({args.plan_cache})")
@@ -97,7 +103,7 @@ def autotune_main(args) -> None:
     # Numeric check: auto dispatch vs the dense oracle on a reduced-channel
     # slice of the network — the first dense-kept conv plus the first two
     # sparse convs (interpret-mode Pallas stays tractable on CPU).
-    convs = [l for l, _ in cnn.conv_layer_shapes(net, 3, image)]
+    convs = [l for l, _ in program.conv_table]
     picked = ([next(l for l in convs if l.sparsity == 0)]
               + [l for l in convs if l.sparsity > 0][:2])
     slice_net = []
@@ -105,15 +111,17 @@ def autotune_main(args) -> None:
         slice_net.append(dataclasses.replace(
             l, out_c=max(8, min(32, l.out_c // 8)), stride=1))
         slice_net.append(cnn.Relu())
+    slice_prog = lower(slice_net, (3, 12, 12))
     sparams = cnn.init_cnn(slice_net, 3, rng, 12)
     x = jnp.asarray(rng.standard_normal((1, 3, 12, 12)).astype(np.float32))
     # Fresh in-memory cache: the synthetic slice geometries must not be
     # persisted into the deployment plan cache.
-    splan = plan_network(slice_net, 3, 12, batch=1, mode="roofline",
+    splan = plan_program(slice_prog, batch=1, mode="roofline",
                          cache=PlanCache())
     apply_plan_to_params(sparams, splan)
-    y_auto = cnn.cnn_forward(slice_net, sparams, x, method="auto", plan=splan)
-    y_dense = cnn.cnn_forward(slice_net, sparams, x, method="dense")
+    engine = CnnEngine(slice_prog, sparams, splan)
+    y_auto = engine(x, "auto")
+    y_dense = engine(x, "dense")
     np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
                                rtol=1e-4, atol=1e-4)
     methods = sorted({pe.method for pe in splan.values()})

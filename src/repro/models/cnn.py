@@ -7,8 +7,16 @@ selectable method (paper Table/Figs 8-11):
   "lowered"    -- im2col + ELL(CSR) SpMM                  (CUSPARSE analogue)
   "csr-direct" -- Escoin direct sparse conv, pure-JAX scan
   "pallas"     -- Escoin direct sparse conv, Pallas kernel (interpret on CPU)
+                  with the bias/ReLU/shortcut epilogue fused in-kernel
   "auto"       -- per-layer dispatch through a tuned plan from repro.tuning
                   (the paper's kernel customization, measurement-driven)
+
+Execution goes through the compile-once graph engine (``repro.engine``):
+the nested spec is lowered exactly once into a flat typed op program —
+``init_cnn``, ``cnn_forward`` and ``conv_layer_shapes`` all delegate to
+that single lowering pass instead of each re-walking the spec — and
+``cnn_forward`` runs the program through a ``CnnEngine`` with a cached
+``jax.jit`` per (method, input geometry).
 
 Per-layer sparsities default to the Deep-Compression-era profile the paper's
 SkimCaffe models carry (first conv kept dense — pruning conv1 hurts accuracy,
@@ -16,63 +24,17 @@ and the paper's models likewise keep some layers dense).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.direct_conv import dense_conv, direct_sparse_conv
-from repro.core.lowering import lowered_dense_conv, lowered_sparse_conv
-from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
-from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
+from repro.engine import CnnEngine, METHODS, init_conv_params, lower
+# Layer-spec vocabulary (historical home: this module; canonical home:
+# repro.engine.spec — re-exported so existing callers keep working).
+from repro.engine.spec import FC, Concat, Conv, Pool, Relu, Residual  # noqa: F401
 
-CONV_METHODS = ("dense", "lowered", "csr-direct", "pallas", "auto")
-
-
-@dataclasses.dataclass(frozen=True)
-class Conv:
-    name: str
-    out_c: int
-    k: int
-    stride: int = 1
-    pad: int = 0
-    sparsity: float = 0.85   # 0.0 => layer kept dense (runs dense always)
-
-
-@dataclasses.dataclass(frozen=True)
-class Pool:
-    kind: str                # max | avg | gap
-    k: int = 3
-    stride: int = 2
-    pad: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class FC:
-    name: str
-    out_f: int
-    sparsity: float = 0.9
-
-
-@dataclasses.dataclass(frozen=True)
-class Concat:
-    """Inception module: parallel branches concatenated on channels."""
-    branches: Tuple[Tuple[Any, ...], ...]
-
-
-@dataclasses.dataclass(frozen=True)
-class Residual:
-    """ResNet bottleneck: body branch + (optional projection) shortcut."""
-    body: Tuple[Any, ...]
-    proj: Optional[Conv] = None
-
-
-@dataclasses.dataclass(frozen=True)
-class Relu:
-    pass
+CONV_METHODS = METHODS
 
 
 # --------------------------------------------------------------------------
@@ -161,88 +123,86 @@ NETWORKS = {"alexnet": alexnet, "googlenet": googlenet, "resnet50": resnet50}
 
 
 # --------------------------------------------------------------------------
-# init + forward
+# engine delegation: one lowering pass feeds init, forward, and shape tables
 # --------------------------------------------------------------------------
+
+def _lowered(net: Sequence[Any], in_c: int, h: int, w: int):
+    """Lower a spec once per (net, input geometry); memoized."""
+    key = (tuple(net), in_c, h, w)
+    prog = _PROGRAMS.get(key)
+    if prog is None:
+        prog = lower(net, (in_c, h, w))
+        if len(_PROGRAMS) > 64:
+            _PROGRAMS.clear()
+        _PROGRAMS[key] = prog
+    return prog
+
+
+_PROGRAMS: Dict[Any, Any] = {}
+
+
+def _params_fingerprint(params: Dict[str, Any]) -> Tuple[Any, ...]:
+    """Identity snapshot of every parameter leaf.
+
+    jax arrays are immutable, so any update — replacing a weight, or
+    ``apply_plan_to_params`` adding ``ell_auto`` formats — rebinds a dict
+    entry to a *new* object.  Fingerprinting leaf identities lets the
+    engine memo detect such updates and rebind instead of replaying a jit
+    that baked the old arrays in as constants (the legacy eager executor
+    re-read params every call; compiled replay must not silently diverge
+    from that).
+    """
+    out = []
+    for name, entry in params.items():
+        if isinstance(entry, dict):
+            out.append((name, tuple((k, id(v)) for k, v in entry.items())))
+        else:
+            out.append((name, id(entry)))
+    return tuple(out)
+
+
+def engine_for(net: Sequence[Any], params: Dict[str, Any],
+               in_shape: Tuple[int, int, int],
+               plan: Optional[Dict[str, Any]] = None) -> CnnEngine:
+    """A bound :class:`~repro.engine.CnnEngine` for (net, params, geometry).
+
+    Engines are memoized on the lowered program plus the *identity* of
+    ``params``/``plan`` — and a fingerprint of the parameter leaves, so a
+    params update after a forward binds a fresh engine — letting repeated
+    ``cnn_forward`` calls reuse each engine's per-(method, shape) compiled
+    executables.
+    """
+    c, h, w = (int(d) for d in in_shape)
+    program = _lowered(net, c, h, w)
+    key = (id(program), id(params), id(plan))
+    fp = _params_fingerprint(params)
+    hit = _ENGINES.get(key)
+    # id() can be recycled after gc: verify the cached engine still binds
+    # the same live objects (and the same parameter leaves) before reusing.
+    if (hit is not None and hit[1] == fp):
+        eng = hit[0]
+        if eng.program is program and eng.params is params and eng.plan is plan:
+            return eng
+    if len(_ENGINES) > 64:
+        _ENGINES.clear()
+    eng = CnnEngine(program, params, plan)
+    _ENGINES[key] = (eng, fp)
+    return eng
+
+
+_ENGINES: Dict[Any, Tuple[CnnEngine, Tuple[Any, ...]]] = {}
+
 
 def init_cnn(net: Sequence[Any], in_c: int, rng: np.random.Generator,
              image: int = 224) -> Dict[str, Any]:
     """Random pruned weights for every layer (magnitude pruning at each
-    layer's configured sparsity), plus precomputed Escoin formats."""
-    params: Dict[str, Any] = {}
+    layer's configured sparsity), plus precomputed Escoin formats.
 
-    def walk(layers, c):
-        for l in layers:
-            if isinstance(l, Conv):
-                w = (rng.standard_normal((l.out_c, c, l.k, l.k))
-                     .astype(np.float32) * (2.0 / (c * l.k * l.k)) ** 0.5)
-                if l.sparsity > 0:
-                    w = np.asarray(magnitude_prune(jnp.asarray(w), l.sparsity))
-                entry = {"w": jnp.asarray(w),
-                         "b": jnp.zeros((l.out_c,), jnp.float32)}
-                if l.sparsity > 0:
-                    entry["ell"] = ell_from_dense_conv(w)
-                    entry["ell2d"] = ell_from_dense(w.reshape(l.out_c, -1))
-                params[l.name] = entry
-                c = l.out_c
-            elif isinstance(l, Concat):
-                c = sum(walk(br, c) for br in l.branches)
-            elif isinstance(l, Residual):
-                cb = walk(l.body, c)
-                if l.proj is not None:
-                    walk((l.proj,), c)
-                c = cb
-            elif isinstance(l, FC):
-                pass  # handled at forward time with lazily-known in dim
-            # Pool / Relu: no params
-        return c
-
-    walk(net, in_c)
-    params["_fc_rng"] = rng.integers(0, 2**31)
-    return params
-
-
-def _conv_apply(l: Conv, entry: Dict[str, Any], x: jax.Array, method: str,
-                plan: Optional[Dict[str, Any]] = None) -> jax.Array:
-    tm = te = tf = None
-    if method == "auto":
-        # Per-layer kernel customization: the tuned plan names the method
-        # (and tm/te/tf/pad_to) for this layer; missing entries fall back
-        # dense.  Strided layers are pallas-eligible — the kernel applies
-        # the stride in-kernel.
-        pe = (plan or {}).get(l.name)
-        method = pe.method if pe is not None else "dense"
-        if pe is not None:
-            tm, te, tf = pe.tm, pe.te, pe.tf
-        ell = entry.get("ell_auto", entry.get("ell"))
-        ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
-    else:
-        ell, ell2d = entry.get("ell"), entry.get("ell2d")
-    if l.sparsity == 0 or method == "dense":
-        y = dense_conv(x, entry["w"], stride=l.stride, padding=l.pad)
-    elif method == "lowered":
-        y = lowered_sparse_conv(x, ell2d, l.k, l.k,
-                                stride=l.stride, padding=l.pad)
-    elif method == "csr-direct":
-        y = direct_sparse_conv(x, ell, stride=l.stride, padding=l.pad)
-    elif method == "pallas":
-        y = pallas_sparse_conv(x, ell, stride=l.stride, padding=l.pad,
-                               tm=tm, te=te, tf=tf, interpret=True)
-    else:
-        raise ValueError(method)
-    return y + entry["b"][None, :, None, None]
-
-
-def _pool(l: Pool, x: jax.Array) -> jax.Array:
-    if l.kind == "gap":
-        return x.mean(axis=(2, 3), keepdims=True)
-    init = -jnp.inf if l.kind == "max" else 0.0
-    op = jax.lax.max if l.kind == "max" else jax.lax.add
-    y = jax.lax.reduce_window(
-        x, init, op, (1, 1, l.k, l.k), (1, 1, l.stride, l.stride),
-        ((0, 0), (0, 0), (l.pad, l.pad), (l.pad, l.pad)))
-    if l.kind == "avg":
-        y = y / (l.k * l.k)
-    return y
+    Delegates to the engine's single lowering pass — the conv table drives
+    RNG draws in the historical spec-walk order, so weights are
+    bit-identical to the pre-engine walker's.
+    """
+    return init_conv_params(_lowered(net, in_c, image, image), rng)
 
 
 def cnn_forward(net: Sequence[Any], params: Dict[str, Any], x: jax.Array,
@@ -253,69 +213,14 @@ def cnn_forward(net: Sequence[Any], params: Dict[str, Any], x: jax.Array,
     ``method="auto"`` dispatches each conv through its tuned plan entry
     (``repro.tuning``).  With no plan supplied, a roofline-mode plan is
     computed on the fly from the input geometry (no measurement needed).
+    Execution is the engine's cached-jit program replay; FC weights come
+    from the engine bind (never created inside a trace).
     """
-    if method == "auto" and plan is None:
-        from repro.tuning.planner import plan_network  # lazy: avoids cycle
-        plan = plan_network(net, int(x.shape[1]), int(x.shape[2]),
-                            batch=int(x.shape[0]), mode="roofline")
-    fc_rng = np.random.default_rng(int(params["_fc_rng"]))
-
-    def walk(layers, x):
-        for l in layers:
-            if isinstance(l, Conv):
-                x = _conv_apply(l, params[l.name], x, method, plan)
-            elif isinstance(l, Relu):
-                x = jax.nn.relu(x)
-            elif isinstance(l, Pool):
-                x = _pool(l, x)
-            elif isinstance(l, Concat):
-                x = jnp.concatenate([walk(br, x) for br in l.branches], axis=1)
-            elif isinstance(l, Residual):
-                y = walk(l.body, x)
-                sc = (_conv_apply(l.proj, params[l.proj.name], x, method, plan)
-                      if l.proj is not None else x)
-                x = y + sc
-            elif isinstance(l, FC):
-                flat = x.reshape(x.shape[0], -1)
-                key = f"{l.name}:{flat.shape[1]}"
-                if key not in params:
-                    # cache as numpy: a jnp constant created inside a jit
-                    # trace would be a tracer and leak across traces
-                    params[key] = (
-                        fc_rng.standard_normal((flat.shape[1], l.out_f))
-                        .astype(np.float32) * (1.0 / flat.shape[1]) ** 0.5)
-                x = flat @ params[key]
-        return x
-
-    return walk(net, x)
+    engine = engine_for(net, params, x.shape[1:], plan)
+    return engine(x, method)
 
 
 def conv_layer_shapes(net: Sequence[Any], in_c: int, image: int,
                       ) -> List[Tuple[Conv, Tuple[int, int, int]]]:
     """Static (layer, (C, H, W)) input-shape table for benchmarks."""
-    out: List[Tuple[Conv, Tuple[int, int, int]]] = []
-
-    def walk(layers, c, hw):
-        for l in layers:
-            if isinstance(l, Conv):
-                out.append((l, (c, hw, hw)))
-                hw = (hw + 2 * l.pad - l.k) // l.stride + 1
-                c = l.out_c
-            elif isinstance(l, Pool):
-                if l.kind == "gap":
-                    hw = 1
-                else:
-                    hw = (hw + 2 * l.pad - l.k) // l.stride + 1
-            elif isinstance(l, Concat):
-                subs = [walk(br, c, hw) for br in l.branches]
-                c = sum(s[0] for s in subs)
-                hw = subs[0][1]
-            elif isinstance(l, Residual):
-                cb, hwb = walk(l.body, c, hw)
-                if l.proj is not None:
-                    walk((l.proj,), c, hw)
-                c, hw = cb, hwb
-        return c, hw
-
-    walk(net, in_c, image)
-    return out
+    return list(_lowered(net, in_c, image, image).conv_table)

@@ -3,25 +3,32 @@
 Per-layer method/tile selection, measurement-driven with an analytical
 roofline fallback, persisted to a JSON plan cache:
 
-  space    -- candidate enumeration (method x (tm, te, tf) x pad_to) from
-              geometry; spatial tiles come from the kernel's halo'd-block
-              VMEM feasibility model
-  measure  -- wall-clock timing + roofline scoring of candidates
-  cache    -- versioned JSON plan cache keyed on geometry/sparsity/dtype/backend
-  planner  -- network walker producing executable {layer: PlanEntry} plans
+  space    -- candidate enumeration (method x (tm, te, tf) x pad_to x fuse)
+              from geometry; spatial tiles come from the kernel's
+              halo'd-block VMEM feasibility model, the fuse axis from the
+              conv's lowered epilogue (bias/ReLU/shortcut in-kernel)
+  measure  -- wall-clock timing + roofline scoring of candidates (the
+              roofline credits the fused epilogue's saved output passes)
+  cache    -- versioned JSON plan cache keyed on geometry/epilogue/sparsity/
+              dtype/backend
+  planner  -- plans the engine's lowered program (one ConvOp at a time)
+              into executable {layer: PlanEntry} tables
 """
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key, sparsity_bucket
-from repro.tuning.measure import (measurable, measure_candidate,
-                                  roofline_estimate, time_fn)
+from repro.tuning.measure import (epilogue_bytes, measurable,
+                                  measure_candidate, roofline_estimate,
+                                  time_fn)
 from repro.tuning.planner import (apply_plan_to_params, format_plan,
-                                  geometry_for, plan_layer, plan_network)
+                                  geometry_for, geometry_of_op, plan_layer,
+                                  plan_network, plan_program)
 from repro.tuning.space import (Candidate, ConvGeometry, enumerate_candidates,
                                 METHODS, PAD_TO_BUCKETS, pallas_feasible)
 
 __all__ = [
     "Candidate", "ConvGeometry", "METHODS", "PAD_TO_BUCKETS", "PlanCache",
-    "PlanEntry", "apply_plan_to_params", "enumerate_candidates", "format_plan",
-    "geometry_for", "layer_key", "measurable", "measure_candidate",
-    "pallas_feasible", "plan_layer", "plan_network", "roofline_estimate",
+    "PlanEntry", "apply_plan_to_params", "enumerate_candidates",
+    "epilogue_bytes", "format_plan", "geometry_for", "geometry_of_op",
+    "layer_key", "measurable", "measure_candidate", "pallas_feasible",
+    "plan_layer", "plan_network", "plan_program", "roofline_estimate",
     "sparsity_bucket", "time_fn",
 ]

@@ -9,14 +9,18 @@ models share one entry.
 
 Format (``docs/autotuning.md`` documents it for humans):
 
-    {"version": 2,
+    {"version": 3,
      "entries": {"<key>": {"method": "pallas", "tm": 64, "te": 32, "tf": 32,
-                           "pad_to": 8, "est_s": 1.2e-4, "source": "roofline"}}}
+                           "pad_to": 8, "fuse": true, "est_s": 1.2e-4,
+                           "source": "roofline"}}}
 
-Version history: v2 added the output spatial tile ``(te, tf)`` to pallas
-entries.  v1 documents load via migration — their entries get
-``te = tf = None``, the untiled full-extent schedule, which is exactly what
-the v1 kernel executed — and are re-persisted as v2 on the next save.
+Version history: v3 added the ``fuse`` flag (in-kernel epilogue: bias /
+ReLU / bottleneck shortcut applied to the f32 accumulator) to pallas
+entries; v2 added the output spatial tile ``(te, tf)``.  Older documents
+load via migration — v1 entries get ``te = tf = None`` (the untiled
+schedule the v1 kernel executed), and v1/v2 entries get ``fuse = False``
+(those kernels always ran the unfused three-pass epilogue) — and are
+re-persisted as v3 on the next save.
 """
 from __future__ import annotations
 
@@ -27,9 +31,9 @@ from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
 
-CACHE_VERSION = 2
+CACHE_VERSION = 3
 # Older schema versions load() can migrate in-memory (see module docstring).
-MIGRATABLE_VERSIONS = (1,)
+MIGRATABLE_VERSIONS = (1, 2)
 
 # Sparsity bucket width for cache keys: layers within 5% density share plans.
 SPARSITY_BUCKET = 0.05
@@ -44,23 +48,27 @@ class PlanEntry:
     pad_to: Optional[int] = None
     te: Optional[int] = None      # output spatial tile (None: untiled)
     tf: Optional[int] = None
+    fuse: bool = False            # pallas: in-kernel epilogue
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
 
     @property
     def candidate(self) -> Candidate:
         return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to,
-                         te=self.te, tf=self.tf)
+                         te=self.te, tf=self.tf, fuse=self.fuse)
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
-                "te": self.te, "tf": self.tf,
+                "te": self.te, "tf": self.tf, "fuse": self.fuse,
                 "est_s": self.est_s, "source": self.source}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanEntry":
+        # v1/v2 migration: absent te/tf means the untiled schedule, absent
+        # fuse means the unfused three-pass epilogue those kernels ran.
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
                    te=d.get("te"), tf=d.get("tf"),
+                   fuse=bool(d.get("fuse", False)),
                    est_s=float(d.get("est_s", 0.0)),
                    source=d.get("source", "heuristic"))
 
@@ -70,10 +78,16 @@ def sparsity_bucket(sparsity: float) -> float:
 
 
 def layer_key(g: ConvGeometry, backend: str) -> str:
-    """Cache key: geometry x sparsity bucket x dtype x backend."""
+    """Cache key: geometry x epilogue x sparsity bucket x dtype x backend.
+
+    The epilogue part (``ep<relu><residual>``) keys the fuse axis: two convs
+    with identical geometry but different fused epilogues (e.g. a bottleneck
+    tail with a shortcut vs a plain conv+ReLU) must never share an entry —
+    their candidate spaces and traffic models differ.
+    """
     return (f"m{g.m}_c{g.c}_h{g.h}w{g.w}_r{g.r}s{g.s}_st{g.stride}"
-            f"_p{g.pad}_n{g.batch}_sp{sparsity_bucket(g.sparsity)}"
-            f"_{g.dtype}_{backend}")
+            f"_p{g.pad}_n{g.batch}_ep{int(g.relu)}{int(g.residual)}"
+            f"_sp{sparsity_bucket(g.sparsity)}_{g.dtype}_{backend}")
 
 
 class PlanCache:
@@ -101,9 +115,10 @@ class PlanCache:
                 f"plan cache {path} has version {version!r}, "
                 f"expected {CACHE_VERSION} (or migratable "
                 f"{MIGRATABLE_VERSIONS})")
-        # v1 -> v2 migration happens in from_dict: absent te/tf default to
-        # None — the untiled schedule the v1 kernel ran.  save() re-persists
-        # as the current version.
+        # v1/v2 migration happens in from_dict: absent te/tf default to None
+        # (the untiled schedule) and absent fuse to False (the unfused
+        # epilogue those kernels ran).  save() re-persists as the current
+        # version.
         self.entries = {k: PlanEntry.from_dict(v)
                         for k, v in doc.get("entries", {}).items()}
         return self

@@ -14,7 +14,6 @@ Two scoring modes, both returning seconds (lower is better):
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Optional
 
@@ -25,7 +24,8 @@ import numpy as np
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
-from repro.kernels.sparse_conv.ops import halo_extent, sparse_conv
+from repro.kernels.sparse_conv.ops import (apply_epilogue, halo_extent,
+                                           sparse_conv)
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 from repro.tuning.space import Candidate, ConvGeometry
 
@@ -47,6 +47,30 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 # analytic roofline scoring
 # ---------------------------------------------------------------------------
 
+def epilogue_bytes(g: ConvGeometry, fused: bool) -> float:
+    """HBM traffic the conv's epilogue (bias / ReLU / shortcut) costs.
+
+    Unfused, every epilogue stage is a full round-trip of the output tensor:
+    the bias add reads and rewrites it (plus the bias row), the ReLU reads
+    and rewrites it again, and a bottleneck shortcut reads the output, the
+    shortcut tensor, and writes once more.  Fused, the epilogue runs on the
+    f32 accumulator in VMEM — only the bias row and (for bottleneck tails)
+    one read of the shortcut tensor ever touch HBM.  This is the tuner's
+    credit for the saved passes.
+    """
+    n, m = g.batch, g.m
+    dout = float(n * m * g.e * g.f * 4)
+    bias = float(m * 4)
+    if fused:
+        return bias + (dout if g.residual else 0.0)
+    extra = 2 * dout + bias                       # bias pass
+    if g.relu:
+        extra += 2 * dout                         # ReLU pass
+    if g.residual:
+        extra += 2 * dout + dout                  # add pass + shortcut read
+    return extra
+
+
 def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     """max(compute, memory) time bound for one candidate, in seconds.
 
@@ -64,6 +88,12 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
                   more halo re-fetch (the tuner's main spatial signal),
                   while the nnz loop bound skips padding, so padded K costs
                   no flops.
+
+    Every method additionally pays its epilogue traffic
+    (:func:`epilogue_bytes`): the unfused bias/ReLU/shortcut passes for
+    dense/lowered/csr-direct and unfused pallas, or just the bias row (+ one
+    shortcut read) for a fused pallas candidate — the saved output passes
+    are the fused epilogue's roofline credit.
     """
     n, m, c = g.batch, g.m, g.c
     rs = g.r * g.s
@@ -73,18 +103,21 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     dout = float(n * m * e * f * 4)          # f32 accumulate
     dense_fl = 2.0 * n * m * c * rs * e * f
     nnz = float(m * g.row_nnz_est)           # true nonzeros (est.)
+    ep_unfused = epilogue_bytes(g, fused=False)
     if cand.method == "dense":
         return max(dense_fl / PEAK_FLOPS,
-                   (din + dout + itemsize * m * c * rs) / HBM_BW)
+                   (din + dout + itemsize * m * c * rs + ep_unfused) / HBM_BW)
     k_pad = g.k_est(cand.pad_to or 8)
     ell_bytes = float(m * k_pad * (itemsize + 4))  # value + packed index
     padded_fl = 2.0 * n * m * k_pad * e * f
     true_fl = 2.0 * n * nnz * e * f
     if cand.method == "lowered":
         im2col = float(n * c * rs * e * f * itemsize)
-        return max(padded_fl / PEAK_FLOPS, (2 * im2col + dout + ell_bytes) / HBM_BW)
+        return max(padded_fl / PEAK_FLOPS,
+                   (2 * im2col + dout + ell_bytes + ep_unfused) / HBM_BW)
     if cand.method == "csr-direct":
-        return max(padded_fl / PEAK_FLOPS, (din + dout + ell_bytes) / HBM_BW)
+        return max(padded_fl / PEAK_FLOPS,
+                   (din + dout + ell_bytes + ep_unfused) / HBM_BW)
     if cand.method == "pallas":
         te = min(cand.te or e, e)
         tf = min(cand.tf or f, f)
@@ -92,7 +125,9 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
         halo_w = halo_extent(tf, g.stride, g.s)
         cells = ((e + te - 1) // te) * ((f + tf - 1) // tf)
         din_staged = float(n * cells * c * halo_h * halo_w * itemsize)
-        return max(true_fl / PEAK_FLOPS, (din_staged + dout + ell_bytes) / HBM_BW)
+        ep = epilogue_bytes(g, fused=cand.fuse)
+        return max(true_fl / PEAK_FLOPS,
+                   (din_staged + dout + ell_bytes + ep) / HBM_BW)
     raise ValueError(cand.method)
 
 
@@ -102,26 +137,51 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
 
 def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
                  *, interpret: bool = True):
-    """(fn, args) executing one candidate on a pruned dense (M, C, R, S) bank."""
+    """(fn, args) executing one candidate on a pruned dense (M, C, R, S) bank.
+
+    Every runner executes the conv *plus its epilogue* (bias, and the
+    ReLU/shortcut stages the geometry's fused-epilogue flags name), so
+    fused and unfused candidates are wall-timed over the same math: unfused
+    runners apply the epilogue as separate ops, a ``fuse=True`` pallas
+    runner hands it to the kernel.
+    """
+    rng = np.random.default_rng(1)
+    bias = jnp.zeros((g.m,), jnp.float32)
+    res = (jnp.asarray(rng.standard_normal(
+        (g.batch, g.m, g.e, g.f)).astype(np.float32))
+        if g.residual else None)
+
+    def epilogue(y):
+        return apply_epilogue(y, bias, g.relu, res)
+
     if cand.method == "dense":
-        fn = jax.jit(functools.partial(
-            dense_conv, stride=g.stride, padding=g.pad))
+        fn = jax.jit(lambda x, w: epilogue(
+            dense_conv(x, w, stride=g.stride, padding=g.pad)))
         return fn, (jnp.asarray(w_dense),)
     pad_to = cand.pad_to or 8
     if cand.method == "lowered":
         ell2d = ell_from_dense(w_dense.reshape(g.m, -1), pad_to=pad_to)
-        fn = jax.jit(functools.partial(
-            lowered_sparse_conv, r=g.r, s=g.s, stride=g.stride, padding=g.pad))
-        return (lambda x, e2d=ell2d: fn(x, e2d)), ()
+        fn = jax.jit(lambda x, e2d=ell2d: epilogue(lowered_sparse_conv(
+            x, e2d, r=g.r, s=g.s, stride=g.stride, padding=g.pad)))
+        return fn, ()
     ell = ell_from_dense_conv(w_dense, pad_to=pad_to)
     if cand.method == "csr-direct":
-        fn = jax.jit(functools.partial(
-            direct_sparse_conv, stride=g.stride, padding=g.pad))
-        return (lambda x, e=ell: fn(x, e)), ()
+        fn = jax.jit(lambda x, e=ell: epilogue(direct_sparse_conv(
+            x, e, stride=g.stride, padding=g.pad)))
+        return fn, ()
     if cand.method == "pallas":
-        return (lambda x, e=ell: sparse_conv(
+        # Both variants are wrapped in one outer jit so the unfused
+        # epilogue's extra ops compile into the same dispatch as the conv —
+        # anything else would bill eager-dispatch overhead to the unfused
+        # schedule and bias the fused-vs-unfused comparison.
+        if cand.fuse:
+            return jax.jit(lambda x, e=ell: sparse_conv(
+                x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
+                te=cand.te, tf=cand.tf, bias=bias, fuse_relu=g.relu,
+                residual=res, interpret=interpret)), ()
+        return jax.jit(lambda x, e=ell: epilogue(sparse_conv(
             x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
-            te=cand.te, tf=cand.tf, interpret=interpret)), ()
+            te=cand.te, tf=cand.tf, interpret=interpret))), ()
     raise ValueError(cand.method)
 
 

@@ -1,13 +1,18 @@
-"""Network-level planner: walk a CNN spec, emit an executable per-layer plan.
+"""Network-level planner: plan a lowered engine program, per-conv-op.
 
 The planner turns the static candidate space (``space.py``) plus a scoring
 mode (``measure.py``) into a ``{layer_name: PlanEntry}`` plan, consulting and
 filling a persistent :class:`~repro.tuning.cache.PlanCache` so tuning runs
-once per deployment.  ``models/cnn.py`` executes the plan via
-``method="auto"``.
+once per deployment.  It operates on the engine's flat lowered program
+(``repro.engine.lower``) — the spec is walked exactly once, by the engine,
+and the planner iterates the resulting ``ConvOp`` list with every geometry
+(including the fused-epilogue flags) already resolved.
 
-Identical geometries (e.g. repeated ResNet bottlenecks) share one cache key,
-so a 53-conv network typically tunes only a handful of distinct layers.
+Identical geometries (e.g. repeated ResNet bottlenecks) share one key and
+are scored once per run even without a persistent cache; the key includes
+the epilogue signature, so a bottleneck-tail conv (fused shortcut) never
+reuses the measurement of a plain conv+ReLU with the same shape.
+``models/cnn.py`` / ``CnnEngine`` execute the plan via ``method="auto"``.
 """
 from __future__ import annotations
 
@@ -18,19 +23,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
-from repro.models import cnn
+from repro.engine import ConvOp, Program, lower, spec
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key
 from repro.tuning.measure import (measurable, measure_candidate,
                                   roofline_estimate)
 from repro.tuning.space import ConvGeometry, enumerate_candidates
 
 
-def geometry_for(layer: "cnn.Conv", c: int, h: int, w: int, *, batch: int = 1,
-                 dtype: str = "float32") -> ConvGeometry:
+def geometry_for(layer: "spec.Conv", c: int, h: int, w: int, *, batch: int = 1,
+                 dtype: str = "float32", relu: bool = False,
+                 residual: bool = False) -> ConvGeometry:
+    """Geometry from a raw layer spec (no epilogue flags unless given)."""
     return ConvGeometry(
         name=layer.name, m=layer.out_c, c=c, h=h, w=w, r=layer.k, s=layer.k,
         stride=layer.stride, pad=layer.pad, sparsity=layer.sparsity,
-        batch=batch, dtype=dtype)
+        batch=batch, dtype=dtype, relu=relu, residual=residual)
+
+
+def geometry_of_op(op: ConvOp, *, batch: int = 1,
+                   dtype: str = "float32") -> ConvGeometry:
+    """Geometry from a lowered ``ConvOp`` — carries the fused-epilogue
+    signature (ReLU / bottleneck shortcut) into the cache key and the
+    candidate space's ``fuse`` axis."""
+    return ConvGeometry(
+        name=op.name, m=op.m, c=op.c, h=op.h, w=op.w, r=op.k, s=op.k,
+        stride=op.stride, pad=op.pad, sparsity=op.sparsity, batch=batch,
+        dtype=dtype, relu=op.fuse_relu, residual=op.res is not None)
 
 
 def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
@@ -67,11 +85,11 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
         if t < best_t:
             best, best_t = cd, t
     return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
-                     te=best.te, tf=best.tf, est_s=best_t,
+                     te=best.te, tf=best.tf, fuse=best.fuse, est_s=best_t,
                      source="measured" if mode == "wall" else "roofline")
 
 
-def plan_network(net: Sequence[Any], in_c: int, image: int, *, batch: int = 1,
+def plan_program(program: Program, *, batch: int = 1,
                  dtype: str = "float32", mode: str = "roofline",
                  cache: Optional[PlanCache] = None,
                  params: Optional[Dict[str, Any]] = None,
@@ -79,43 +97,56 @@ def plan_network(net: Sequence[Any], in_c: int, image: int, *, batch: int = 1,
                  interpret: Optional[bool] = None,
                  warmup: int = 1, iters: int = 3,
                  ) -> Dict[str, PlanEntry]:
-    """Tune every conv layer of a network table; returns name -> PlanEntry.
+    """Tune every conv op of a lowered program; returns name -> PlanEntry.
 
     Cache hits skip scoring entirely; misses are scored and written back (and
-    persisted to ``cache.path`` if set).  ``mode="roofline"`` needs no
-    weights; ``mode="wall"`` measures on the pruned weights in ``params``
-    (as built by ``cnn.init_cnn``).
+    persisted to ``cache.path`` if set).  Duplicate geometries — same layer
+    key, which includes the fused-epilogue signature — are scored once per
+    run even with no cache supplied.  ``mode="roofline"`` needs no weights;
+    ``mode="wall"`` measures on the pruned weights in ``params`` (as built
+    by ``cnn.init_cnn`` / ``engine.init_conv_params``).
     """
     if mode not in ("roofline", "wall"):
         raise ValueError(f"unknown tuning mode {mode!r}")
     backend = backend or jax.default_backend()
     plan: Dict[str, PlanEntry] = {}
+    scored: Dict[str, PlanEntry] = {}
     misses = 0
-    for layer, (c, h, w) in cnn.conv_layer_shapes(net, in_c, image):
-        g = geometry_for(layer, c, h, w, batch=batch, dtype=dtype)
+    for op in program.conv_ops:
+        g = geometry_of_op(op, batch=batch, dtype=dtype)
         key = layer_key(g, backend)
         entry = cache.get(key) if cache is not None else None
         if entry is None:
-            if layer.sparsity <= 0:
+            entry = scored.get(key)
+        if entry is None:
+            if op.sparsity <= 0:
                 # Dense-kept layer: one candidate, nothing to measure.
                 entry = PlanEntry(method="dense", source="heuristic")
             else:
                 w_dense = None
                 if mode == "wall":
-                    if params is None or layer.name not in params:
+                    if params is None or op.name not in params:
                         raise ValueError(
-                            f"wall-mode tuning needs params for {layer.name}")
-                    w_dense = np.asarray(params[layer.name]["w"])
+                            f"wall-mode tuning needs params for {op.name}")
+                    w_dense = np.asarray(params[op.name]["w"])
                 entry = plan_layer(g, mode=mode, w_dense=w_dense,
                                    backend=backend, interpret=interpret,
                                    warmup=warmup, iters=iters)
             misses += 1
+            scored[key] = entry
             if cache is not None:
                 cache.put(key, entry)
-        plan[layer.name] = entry
+        plan[op.name] = entry
     if cache is not None and cache.path and misses:
         cache.save()
     return plan
+
+
+def plan_network(net: Sequence[Any], in_c: int, image: int, *, batch: int = 1,
+                 **kw) -> Dict[str, PlanEntry]:
+    """Convenience wrapper: lower the spec once, then :func:`plan_program`."""
+    program = lower(net, (in_c, image, image))
+    return plan_program(program, batch=batch, **kw)
 
 
 def apply_plan_to_params(params: Dict[str, Any],
@@ -142,10 +173,11 @@ def apply_plan_to_params(params: Dict[str, Any],
 def format_plan(plan: Dict[str, PlanEntry]) -> str:
     """Human-readable per-layer plan table (the paper's customization table)."""
     lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'te':>4} {'tf':>4} "
-             f"{'pad_to':>6} {'est_us':>10} source"]
+             f"{'pad_to':>6} {'fuse':>5} {'est_us':>10} source"]
     for name, pe in plan.items():
         lines.append(
             f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
             f"{pe.te or '-':>4} {pe.tf or '-':>4} "
-            f"{pe.pad_to or '-':>6} {pe.est_s * 1e6:>10.1f} {pe.source}")
+            f"{pe.pad_to or '-':>6} {'y' if pe.fuse else '-':>5} "
+            f"{pe.est_s * 1e6:>10.1f} {pe.source}")
     return "\n".join(lines)

@@ -10,12 +10,17 @@ enumerates the discrete choices the tuner measures over:
                only; te/tf = None means the untiled full-extent schedule)
   pad_to      ∈ ELL row-padding buckets (K granularity; trades padded work
                for jit-specialisation sharing)
+  fuse        ∈ {False, True}  (pallas only): execute the conv's epilogue —
+               bias add, ReLU, bottleneck shortcut — in-kernel on the f32
+               accumulator (one output write) instead of as separate HBM
+               passes.  Fused-residual candidates must additionally fit the
+               shortcut input tile in VMEM.
 
 Hardware-infeasible points are pruned statically: the Pallas kernel's packed
-index array must fit the SMEM budget, and every emitted tiling fits VMEM
-(``kernels.sparse_conv.ops.tile_candidates``).  Strided layers are eligible
-— the kernel applies the stride in-kernel.  Fully-dense layers
-(sparsity == 0) only ever run dense.
+index array (+ the f32 bias row) must fit the SMEM budget, and every emitted
+tiling fits VMEM (``kernels.sparse_conv.ops.tile_candidates``).  Strided
+layers are eligible — the kernel applies the stride in-kernel.  Fully-dense
+layers (sparsity == 0) only ever run dense.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.kernels.sparse_conv.ops import SMEM_BUDGET, tile_candidates
+from repro.kernels.sparse_conv.ops import smem_fits, tile_candidates
 
 METHODS = ("dense", "lowered", "csr-direct", "pallas")
 
@@ -32,8 +37,9 @@ METHODS = ("dense", "lowered", "csr-direct", "pallas")
 # sparse rows; 16 shares jit specialisations across near-equal layers.
 PAD_TO_BUCKETS = (4, 8, 16)
 
-# Cap on pallas tilings enumerated per (layer, pad_to): tile_candidates is
-# preference-sorted, so the head of the list is the schedules worth measuring.
+# Cap on pallas tilings enumerated per (layer, pad_to, fuse): tile_candidates
+# is preference-sorted, so the head of the list is the schedules worth
+# measuring.
 MAX_TILINGS = 24
 
 
@@ -42,6 +48,10 @@ class ConvGeometry:
     """Static description of one conv layer instance (what the cache keys on).
 
     m/c: out/in channels; h/w: input spatial dims; r/s: filter dims.
+    ``relu``/``residual`` describe the epilogue the engine fused into this
+    conv at lowering time — they shape the candidate space (the ``fuse``
+    axis) and the roofline's epilogue-traffic accounting, so fused and
+    unfused variants of an otherwise identical geometry never share a plan.
     """
 
     name: str
@@ -56,6 +66,8 @@ class ConvGeometry:
     sparsity: float = 0.0
     batch: int = 1
     dtype: str = "float32"
+    relu: bool = False
+    residual: bool = False
 
     @property
     def hp(self) -> int:
@@ -91,7 +103,8 @@ class Candidate:
 
     tm/te/tf are only meaningful for the pallas method (te/tf = None means
     the untiled full-extent spatial schedule); pad_to only for the sparse
-    formats (lowered / csr-direct / pallas).
+    formats (lowered / csr-direct / pallas); ``fuse`` only for pallas —
+    True executes the epilogue in-kernel.
     """
 
     method: str
@@ -99,21 +112,24 @@ class Candidate:
     pad_to: Optional[int] = None
     te: Optional[int] = None
     tf: Optional[int] = None
+    fuse: bool = False
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
-                "te": self.te, "tf": self.tf}
+                "te": self.te, "tf": self.tf, "fuse": self.fuse}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
-                   te=d.get("te"), tf=d.get("tf"))
+                   te=d.get("te"), tf=d.get("tf"),
+                   fuse=bool(d.get("fuse", False)))
 
 
 def pallas_feasible(g: ConvGeometry, k: int) -> bool:
-    """The Pallas kernel needs SMEM-resident packed indices and at least one
-    VMEM-feasible (tm, te, tf) tiling.  Stride is handled in-kernel."""
-    if g.m * k * 4 > SMEM_BUDGET:
+    """The Pallas kernel needs SMEM-resident packed indices (+ bias row) and
+    at least one VMEM-feasible (tm, te, tf) tiling.  Stride is handled
+    in-kernel."""
+    if not smem_fits(g.m, k):
         return False
     return bool(tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride))
 
@@ -125,7 +141,9 @@ def enumerate_candidates(g: ConvGeometry,
     Every emitted pallas ``(tm, te, tf)`` fits the VMEM budget (via
     ``kernels.sparse_conv.ops.tile_candidates`` — the heuristic the tuner
     refines; the list is preference-sorted and capped at MAX_TILINGS); every
-    pallas candidate fits the SMEM budget.
+    pallas candidate fits the SMEM budget.  Pallas points come in unfused
+    and fused (in-kernel epilogue) variants; fused-residual tilings reserve
+    VMEM for the shortcut input tile, so their feasible set can be smaller.
     """
     if g.sparsity <= 0.0:
         # Dense-kept layers (paper: conv1 et al.) have no sparse format.
@@ -139,10 +157,16 @@ def enumerate_candidates(g: ConvGeometry,
             out.append(Candidate("lowered", pad_to=pad_to))
         if "csr-direct" in methods:
             out.append(Candidate("csr-direct", pad_to=pad_to))
-        if "pallas" in methods and g.m * k * 4 <= SMEM_BUDGET:
+        if "pallas" in methods and smem_fits(g.m, k):
             tilings = tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s,
                                       g.stride)[:MAX_TILINGS]
             for tm, te, tf in tilings:
                 out.append(Candidate("pallas", tm=tm, pad_to=pad_to,
                                      te=te, tf=tf))
+            fused = tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s,
+                                    g.stride,
+                                    fuse_res=g.residual)[:MAX_TILINGS]
+            for tm, te, tf in fused:
+                out.append(Candidate("pallas", tm=tm, pad_to=pad_to,
+                                     te=te, tf=tf, fuse=True))
     return out

@@ -1,4 +1,6 @@
-"""Pallas direct-sparse-conv kernel: interpret-mode sweeps vs the jnp oracle."""
+"""Pallas direct-sparse-conv kernel: interpret-mode sweeps vs the jnp oracle,
+including the fused epilogue (bias / ReLU / residual in-kernel)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -199,6 +201,108 @@ def test_vmem_infeasible_falls_back_to_direct(monkeypatch):
     ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused epilogue: conv+bias+ReLU (+residual) vs the unfused dense oracle
+# ---------------------------------------------------------------------------
+
+def _epilogue_case(seed, n, c, h, w, m, r, *, dtype=jnp.float32, sp=0.7):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)), dtype=dtype)
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), sp))
+    bias = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    return rng, x, wt, bias
+
+
+def _unfused_oracle(x, wt, bias, *, stride, pad, residual=None):
+    y = sparse_conv_ref(x, jnp.asarray(wt), stride=stride, padding=pad)
+    y = y.astype(jnp.float32) + bias[None, :, None, None]
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return jax.nn.relu(y)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("residual", [False, True])
+def test_fused_epilogue_parity(stride, residual):
+    """Fused conv+bias+ReLU (and +residual) vs the unfused dense oracle,
+    with edge tiles: te/tf deliberately do not divide E/F."""
+    n, c, h, w, m, r, pad = 2, 4, 13, 11, 8, 3, 1
+    rng, x, wt, bias = _epilogue_case(1000 + 10 * stride + residual,
+                                      n, c, h, w, m, r)
+    ell = ell_from_dense_conv(wt)
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    res = (jnp.asarray(rng.standard_normal((n, m, e, f)).astype(np.float32))
+           if residual else None)
+    te, tf = max(1, (e + 1) // 2), max(1, f // 2 + 1)   # non-dividing tiles
+    got = sparse_conv(x, ell, stride=stride, padding=pad, tm=4, te=te, tf=tf,
+                      bias=bias, fuse_relu=True, residual=res, interpret=True)
+    ref = _unfused_oracle(x, wt, bias, stride=stride, pad=pad, residual=res)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("residual", [False, True])
+def test_fused_epilogue_parity_bf16(stride, residual):
+    """bf16 inputs through the fused epilogue: the epilogue runs on the f32
+    accumulator, so tolerance is the bf16 rounding of the conv itself."""
+    import dataclasses
+    n, c, h, w, m, r, pad = 1, 4, 12, 12, 8, 3, 1
+    rng, x, wt, bias = _epilogue_case(2000 + 10 * stride + residual,
+                                      n, c, h, w, m, r, dtype=jnp.bfloat16,
+                                      sp=0.8)
+    ell = ell_from_dense_conv(wt)
+    ell = dataclasses.replace(ell, value=ell.value.astype(jnp.bfloat16))
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    res = (jnp.asarray(rng.standard_normal((n, m, e, f)), dtype=jnp.bfloat16)
+           if residual else None)
+    got = sparse_conv(x, ell, stride=stride, padding=pad,
+                      bias=bias, fuse_relu=True, residual=res, interpret=True)
+    ref = _unfused_oracle(x, wt, bias, stride=stride, pad=pad, residual=res)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_fused_epilogue_fallback_applies_epilogue(monkeypatch):
+    """When no VMEM-feasible tiling exists, the fallback must still apply
+    the full epilogue (bias + residual + ReLU), not just the conv."""
+    n, c, h, w, m, r, pad = 1, 4, 10, 10, 8, 3, 1
+    rng, x, wt, bias = _epilogue_case(3000, n, c, h, w, m, r)
+    ell = ell_from_dense_conv(wt)
+    e, f = out_spatial(h, w, r, r, 1, pad)
+    res = jnp.asarray(rng.standard_normal((n, m, e, f)).astype(np.float32))
+    monkeypatch.setattr(ops, "_VMEM_BUDGET", 1024)
+
+    def _boom(*a, **kw):
+        raise AssertionError("over-budget kernel launch")
+
+    monkeypatch.setattr(ops, "sparse_conv_pallas", _boom)
+    got = sparse_conv(x, ell, padding=pad, bias=bias, fuse_relu=True,
+                      residual=res, interpret=True)
+    ref = _unfused_oracle(x, wt, bias, stride=1, pad=pad, residual=res)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_residual_tightens_vmem_feasibility(monkeypatch):
+    """Reserving the residual input tile can rule out tilings that fit
+    without it — tiling_fits must account the extra block."""
+    from repro.kernels.sparse_conv.ops import tiling_fits
+    args = dict(m=8, c=8, e=64, f=64, k=16, r=3, s=3, stride=1,
+                tm=8, te=64, tf=64)
+    # budget sized to fit input block + values + out tile, but not a second
+    # out-tile-sized residual block
+    x_bytes = 8 * 66 * 66 * 4
+    out_bytes = 8 * 64 * 64 * 4
+    monkeypatch.setattr(ops, "_VMEM_BUDGET",
+                        x_bytes + 8 * 16 * 4 + out_bytes)
+    assert tiling_fits(**args)
+    assert not tiling_fits(**args, fuse_res=True)
 
 
 def test_choose_tm_fits_budget():

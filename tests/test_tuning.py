@@ -28,7 +28,8 @@ def _geom(**kw):
 # ---------------------------------------------------------------------------
 
 def _assert_pallas_fits(g, cands):
-    """Every pallas candidate's (tm, te, tf) halo'd working set fits VMEM."""
+    """Every pallas candidate's (tm, te, tf) halo'd working set fits VMEM,
+    fused candidates accounting the residual input tile when present."""
     assert any(c.method == "pallas" for c in cands)
     for cd in cands:
         if cd.method != "pallas":
@@ -38,10 +39,13 @@ def _assert_pallas_fits(g, cands):
         k = g.k_est(cd.pad_to)
         x_bytes = (g.c * halo_extent(cd.te, g.stride, g.r)
                    * halo_extent(cd.tf, g.stride, g.s) * 4)
-        assert x_bytes + cd.tm * k * 4 + cd.tm * cd.te * cd.tf * 4 <= VMEM_BUDGET
+        out_bytes = cd.tm * cd.te * cd.tf * 4
+        res_bytes = out_bytes if (cd.fuse and g.residual) else 0
+        assert x_bytes + cd.tm * k * 4 + out_bytes + res_bytes <= VMEM_BUDGET
         assert tiling_fits(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
-                           cd.tm, cd.te, cd.tf)
-        assert g.m * k * 4 <= SMEM_BUDGET
+                           cd.tm, cd.te, cd.tf,
+                           fuse_res=cd.fuse and g.residual)
+        assert g.m * (k + 1) * 4 <= SMEM_BUDGET
 
 
 def test_candidates_tiles_divide_m_and_fit_budgets():
@@ -107,6 +111,77 @@ def test_roofline_pallas_spatial_tiling_costs_halo():
 
 
 # ---------------------------------------------------------------------------
+# fuse axis (in-kernel epilogue)
+# ---------------------------------------------------------------------------
+
+def test_candidates_include_fused_variants():
+    g = _geom(relu=True)
+    cands = enumerate_candidates(g)
+    fused = [c for c in cands if c.method == "pallas" and c.fuse]
+    unfused = [c for c in cands if c.method == "pallas" and not c.fuse]
+    assert fused and unfused
+    _assert_pallas_fits(g, cands)
+
+
+def test_candidates_fused_residual_fit_vmem():
+    g = _geom(relu=True, residual=True)
+    _assert_pallas_fits(g, enumerate_candidates(g))
+
+
+def test_roofline_credits_fused_epilogue():
+    """The fused epilogue removes full output-tensor passes, so on a
+    memory-bound geometry the fused candidate must score strictly better."""
+    g = _geom(relu=True, residual=True)
+    base = dict(tm=8, pad_to=8)
+    t_unfused = roofline_estimate(g, Candidate("pallas", **base))
+    t_fused = roofline_estimate(g, Candidate("pallas", **base, fuse=True))
+    assert t_fused < t_unfused
+
+
+def test_layer_key_separates_epilogues():
+    """Same geometry, different fused epilogue -> different cache keys, so
+    fused and unfused variants never share a measurement."""
+    plain = layer_key(_geom(), "cpu")
+    relu = layer_key(_geom(relu=True), "cpu")
+    tail = layer_key(_geom(relu=True, residual=True), "cpu")
+    assert len({plain, relu, tail}) == 3
+
+
+def test_plan_program_dedups_on_op_geometry():
+    """Repeated identical bottlenecks are scored once per run (even with no
+    persistent cache), while the fused-tail conv — same shape as a plain
+    conv+ReLU elsewhere — gets its own entry."""
+    from repro.engine import lower
+    from repro.tuning import plan_program
+
+    body = lambda i: cnn.Residual(body=(                       # noqa: E731
+        cnn.Conv(f"b{i}/1x1a", 16, 1, sparsity=0.7), cnn.Relu(),
+        cnn.Conv(f"b{i}/1x1b", 16, 1, sparsity=0.7)))
+    net = [cnn.Conv("stem", 16, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+           body(0), cnn.Relu(), body(1), cnn.Relu()]
+    program = lower(net, (3, 12, 12))
+    calls = []
+    import repro.tuning.planner as planner_mod
+    orig = planner_mod.plan_layer
+
+    def spy(g, **kw):
+        calls.append(g.name)
+        return orig(g, **kw)
+
+    planner_mod.plan_layer, plan = spy, None
+    try:
+        plan = planner_mod.plan_program(program, batch=1, mode="roofline")
+    finally:
+        planner_mod.plan_layer = orig
+    # 4 sparse convs, but only 2 distinct (geometry, epilogue) keys:
+    # the relu'd 1x1a and the shortcut-fused 1x1b tail
+    assert len(plan) == 5
+    assert len(calls) == 2
+    assert plan["b0/1x1a"] == plan["b1/1x1a"]
+    assert plan["b0/1x1b"] == plan["b1/1x1b"]
+
+
+# ---------------------------------------------------------------------------
 # cache / planner round-trip
 # ---------------------------------------------------------------------------
 
@@ -145,9 +220,9 @@ def test_plan_cache_version_guard(tmp_path):
 
 
 def test_plan_cache_v1_migration(tmp_path):
-    """v1 documents (no te/tf) load via migration: entries get te=tf=None —
-    the untiled schedule the v1 kernel ran — and re-save as the current
-    version."""
+    """v1 documents (no te/tf, no fuse) load via migration: entries get
+    te=tf=None — the untiled schedule the v1 kernel ran — and fuse=False
+    (the unfused epilogue), and re-save as the current version."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -160,15 +235,47 @@ def test_plan_cache_v1_migration(tmp_path):
     cache = PlanCache(str(path))
     pe = cache.get("k1")
     assert pe == PlanEntry(method="pallas", tm=64, pad_to=8, te=None, tf=None,
-                           est_s=1e-5, source="roofline")
+                           fuse=False, est_s=1e-5, source="roofline")
     assert pe.candidate.te is None and pe.candidate.tf is None
-    out = tmp_path / "v2.json"
+    assert pe.candidate.fuse is False
+    out = tmp_path / "v3.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 2
+    assert doc["version"] == CACHE_VERSION == 3
     assert doc["entries"]["k1"]["te"] is None
+    assert doc["entries"]["k1"]["fuse"] is False
     # and the migrated file round-trips as current-version
     assert PlanCache(str(out)).get("k1") == pe
+
+
+def test_plan_cache_v2_migration_roundtrip(tmp_path):
+    """v2 documents (te/tf but no fuse) load via migration — entries get
+    fuse=False, the unfused three-pass epilogue the v2 kernel always ran —
+    and the re-saved v3 file round-trips identically."""
+    import json
+
+    from repro.tuning.cache import CACHE_VERSION
+
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps({
+        "version": 2,
+        "entries": {
+            "kp": {"method": "pallas", "tm": 32, "te": 16, "tf": 16,
+                   "pad_to": 4, "est_s": 2e-5, "source": "measured"},
+            "kd": {"method": "dense", "est_s": 0.0, "source": "heuristic"},
+        }}))
+    cache = PlanCache(str(path))
+    pe = cache.get("kp")
+    assert pe == PlanEntry(method="pallas", tm=32, te=16, tf=16, pad_to=4,
+                           fuse=False, est_s=2e-5, source="measured")
+    assert cache.get("kd").fuse is False
+    out = tmp_path / "migrated.json"
+    cache.save(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["version"] == CACHE_VERSION == 3
+    assert doc["entries"]["kp"]["fuse"] is False
+    reloaded = PlanCache(str(out))
+    assert reloaded.entries == cache.entries
 
 
 def test_wall_mode_measures_and_picks(tmp_path):
