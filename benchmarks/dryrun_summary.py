@@ -41,11 +41,13 @@ def render() -> None:
 
 
 def smoke() -> None:
-    """Import every benchmark suite and spot-check the fig11 table rows."""
+    """Import every benchmark suite and spot-check the fig11 table rows, the
+    BENCH_sparse_conv.json schedule rows (pipeline axis), and the plan-cache
+    v1→v4 migrations."""
     # Import errors in any figure module fail here, like benchmarks.run would.
-    from benchmarks import (fig8_sparse_conv, fig9_breakdown,  # noqa: F401
-                            fig10_locality, fig11_end2end, fig12_autotune,
-                            kernels, roofline_table, run)
+    from benchmarks import (bench_sparse_conv, fig8_sparse_conv,  # noqa: F401
+                            fig9_breakdown, fig10_locality, fig11_end2end,
+                            fig12_autotune, kernels, roofline_table, run)
     from repro.models import cnn
 
     micro = [
@@ -62,7 +64,66 @@ def smoke() -> None:
         raise SystemExit(f"benchmark smoke: missing fig11 rows {sorted(missing)}")
     for r in rows:
         print(r)
-    print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import")
+    _smoke_bench_json(bench_sparse_conv)
+    _smoke_cache_migrations()
+    print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
+          "bench json pipeline rows, cache v1-v3 -> v4 migrations")
+
+
+def _smoke_bench_json(bench_sparse_conv) -> None:
+    """BENCH_sparse_conv.json must carry both halo-DMA schedule rows and the
+    pipelined staged-input stalls must be strictly fewer (roofline)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        path = pathlib.Path(td) / "bench.json"
+        bench_sparse_conv.run(str(path), networks=["alexnet"], wall=False)
+        doc = json.loads(path.read_text())
+        layers = doc["networks"]["alexnet"]["layers"]
+        if not layers:
+            raise SystemExit("bench smoke: no sparse-conv layer records")
+        for rec in layers:
+            sch = rec["schedules"]
+            if "blocking" not in sch or "pipelined" not in sch:
+                raise SystemExit(
+                    f"bench smoke: {rec['name']} missing a schedule row")
+        # check_stall_invariant already ran inside run(); assert it is wired
+        bench_sparse_conv.check_stall_invariant(doc)
+
+
+def _smoke_cache_migrations() -> None:
+    """Every migratable plan-cache schema (v1-v3) loads, defaults the fields
+    its kernels predate, and re-persists as the current version."""
+    import tempfile
+
+    from repro.tuning.cache import CACHE_VERSION, MIGRATABLE_VERSIONS, PlanCache
+
+    fixtures = {
+        1: {"method": "pallas", "tm": 64, "pad_to": 8},
+        2: {"method": "pallas", "tm": 32, "te": 16, "tf": 16, "pad_to": 8},
+        3: {"method": "pallas", "tm": 16, "te": 16, "tf": 16, "pad_to": 8,
+            "fuse": True},
+    }
+    if set(fixtures) != set(MIGRATABLE_VERSIONS):
+        raise SystemExit("cache smoke: fixture set out of date with "
+                         f"MIGRATABLE_VERSIONS={MIGRATABLE_VERSIONS}")
+    with tempfile.TemporaryDirectory() as td:
+        for ver, entry in fixtures.items():
+            p = pathlib.Path(td) / f"v{ver}.json"
+            p.write_text(json.dumps({"version": ver, "entries": {"k": entry}}))
+            cache = PlanCache(str(p))
+            pe = cache.get("k")
+            if pe.pipeline or pe.permute:
+                raise SystemExit(
+                    f"cache smoke: v{ver} entry migrated with a non-blocking "
+                    "schedule")
+            out = pathlib.Path(td) / f"v{ver}-migrated.json"
+            cache.save(str(out))
+            doc = json.loads(out.read_text())
+            if doc["version"] != CACHE_VERSION:
+                raise SystemExit(
+                    f"cache smoke: v{ver} re-persisted as {doc['version']}, "
+                    f"want {CACHE_VERSION}")
 
 
 def main() -> None:

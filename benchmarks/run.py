@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  The ``bench`` suite
+additionally writes ``BENCH_sparse_conv.json`` — the machine-readable
+per-layer perf record (kernel roofline ms under blocking vs pipelined halo
+staging, staged-input stalls, wall-clock for the record) that tracks the
+sparse-conv trajectory PR-over-PR.
 
   PYTHONPATH=src python -m benchmarks.run                  # everything
   PYTHONPATH=src python -m benchmarks.run fig8 fig11       # subset
   PYTHONPATH=src python -m benchmarks.run fig8 --autotune  # + tuned row
+  PYTHONPATH=src python -m benchmarks.run bench            # + the JSON
 """
 from __future__ import annotations
 
@@ -12,9 +17,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (fig8_sparse_conv, fig9_breakdown, fig10_locality,
-                            fig11_end2end, fig12_autotune, kernels,
-                            roofline_table)
+    from benchmarks import (bench_sparse_conv, fig8_sparse_conv,
+                            fig9_breakdown, fig10_locality, fig11_end2end,
+                            fig12_autotune, kernels, roofline_table)
     argv = sys.argv[1:]
     autotune = "--autotune" in argv
     suites = {
@@ -25,6 +30,7 @@ def main() -> None:
         "fig12": fig12_autotune.run,
         "kernels": kernels.run,
         "roofline": roofline_table.run,
+        "bench": bench_sparse_conv.run,
     }
     wanted = [a for a in argv if not a.startswith("--")] or list(suites)
     print("name,us_per_call,derived")

@@ -2,9 +2,9 @@
 from repro.core.types import DENSE, METHODS, SparsityConfig, escoin
 from repro.core.pruning import block_prune, magnitude_prune, measured_sparsity, prune
 from repro.core.sparse_format import (
-    BcsrMatrix, EllConv, EllMatrix, bcsr_from_dense, bcsr_to_dense,
-    csr_arrays_from_dense, ell_from_dense, ell_from_dense_conv, ell_to_dense,
-    stretch_offsets)
+    BcsrMatrix, EllConv, EllMatrix, balance_ell_conv, bcsr_from_dense,
+    bcsr_to_dense, csr_arrays_from_dense, ell_from_dense, ell_from_dense_conv,
+    ell_to_dense, inverse_permutation, stretch_offsets)
 from repro.core.direct_conv import dense_conv, direct_sparse_conv, out_spatial
 from repro.core.sparse_linear import bcsr_matmul, dense_matmul, ell_matmul
 from repro.core.lowering import im2col, lowered_dense_conv, lowered_sparse_conv
@@ -12,9 +12,10 @@ from repro.core.lowering import im2col, lowered_dense_conv, lowered_sparse_conv
 __all__ = [
     "DENSE", "METHODS", "SparsityConfig", "escoin",
     "block_prune", "magnitude_prune", "measured_sparsity", "prune",
-    "BcsrMatrix", "EllConv", "EllMatrix", "bcsr_from_dense", "bcsr_to_dense",
-    "csr_arrays_from_dense", "ell_from_dense", "ell_from_dense_conv",
-    "ell_to_dense", "stretch_offsets",
+    "BcsrMatrix", "EllConv", "EllMatrix", "balance_ell_conv",
+    "bcsr_from_dense", "bcsr_to_dense", "csr_arrays_from_dense",
+    "ell_from_dense", "ell_from_dense_conv", "ell_to_dense",
+    "inverse_permutation", "stretch_offsets",
     "dense_conv", "direct_sparse_conv", "out_spatial",
     "bcsr_matmul", "dense_matmul", "ell_matmul",
     "im2col", "lowered_dense_conv", "lowered_sparse_conv",

@@ -23,7 +23,7 @@ consumers only ever see fixed-shape arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +45,16 @@ class EllConv:
     offset: (M, K) int32   -- *stretched* flat offset  c*Hp*Wp + r*Wp + s for a
                               padded input of shape (C, Hp, Wp); recomputed per
                               layer geometry by ``stretch_offsets``.
-    nnz:    (M,)   int32   -- true row lengths (for diagnostics)
+    nnz:    (M,)   int32   -- true row lengths (kernel loop bounds + balance)
     shape:  original (M, C, R, S)
+    perm:   optional (M,) int32 -- row permutation of an *nnz-balanced* bank
+                              (``balance_ell_conv``): row i of this bank is
+                              output channel ``perm[i]`` of the original
+                              filter bank.  None for banks in natural channel
+                              order.  Consumers (``kernels.sparse_conv.ops``)
+                              apply the inverse permutation to the output and
+                              the forward permutation to bias/residual, so the
+                              reordering is invisible outside the kernel.
     """
 
     value: jax.Array
@@ -56,30 +64,35 @@ class EllConv:
     offset: jax.Array
     nnz: jax.Array
     shape: Tuple[int, int, int, int]
+    perm: Optional[jax.Array] = None
 
     @property
     def k(self) -> int:
         return int(self.value.shape[1])
 
     def tree_flatten(self):
-        return (self.value, self.cidx, self.ridx, self.sidx, self.offset, self.nnz), self.shape
+        return (self.value, self.cidx, self.ridx, self.sidx, self.offset,
+                self.nnz, self.perm), self.shape
 
     @classmethod
     def tree_unflatten(cls, shape, leaves):
-        return cls(*leaves, shape=shape)
+        value, cidx, ridx, sidx, offset, nnz, perm = leaves
+        return cls(value, cidx, ridx, sidx, offset, nnz, shape, perm)
 
 
 jax.tree_util.register_pytree_node(
     EllConv, EllConv.tree_flatten, EllConv.tree_unflatten)
 
 
-def ell_from_dense_conv(w, pad_to: int = 8) -> EllConv:
+def ell_from_dense_conv(w, pad_to: int = 8, balance: bool = False) -> EllConv:
     """Convert a dense (M, C, R, S) filter bank to ``EllConv``.
 
     ``pad_to`` rounds K up so jit specialisations are shared across layers with
     similar density (the paper's 'kernel customization' table keys on this).
     K is clamped to ``K >= pad_to >= 1`` even for a fully-pruned (all-zero)
     filter bank, so the Pallas path never sees zero-width value arrays.
+    ``balance=True`` additionally sorts output channels by row nnz
+    (``balance_ell_conv``) and records the permutation in ``perm``.
     """
     w = np.asarray(w)
     m, c, r, s = w.shape
@@ -107,10 +120,11 @@ def ell_from_dense_conv(w, pad_to: int = 8) -> EllConv:
         rid[i, :n] = rows_r[i]
         sid[i, :n] = rows_s[i]
     offset = np.zeros((m, k), dtype=np.int32)  # filled by stretch_offsets
-    return EllConv(
+    ell = EllConv(
         value=jnp.asarray(val), cidx=jnp.asarray(cid), ridx=jnp.asarray(rid),
         sidx=jnp.asarray(sid), offset=jnp.asarray(offset),
         nnz=jnp.asarray(np.asarray(nnz, np.int32)), shape=(m, c, r, s))
+    return balance_ell_conv(ell) if balance else ell
 
 
 def stretch_offsets(ell: EllConv, hp: int, wp: int) -> EllConv:
@@ -120,6 +134,39 @@ def stretch_offsets(ell: EllConv, hp: int, wp: int) -> EllConv:
     """
     off = (ell.cidx * hp + ell.ridx) * wp + ell.sidx
     return dataclasses.replace(ell, offset=off.astype(jnp.int32))
+
+
+def balance_ell_conv(ell: EllConv) -> EllConv:
+    """nnz-balanced channel packing: sort output channels by descending row
+    nnz (Yao et al., *Balanced Sparsity*, arXiv:1811.00206 — balancing
+    nonzeros across parallel workers).
+
+    After sorting, rows of near-equal length sit adjacently, so every TM-tile
+    of the Pallas kernel's channel loop holds rows of near-equal nnz instead
+    of being bounded by its single worst row.  The permutation is carried in
+    ``perm`` (row i of the balanced bank = original channel ``perm[i]``);
+    per-row contents are untouched, so each row's accumulation order — and
+    therefore its f32 result — is bit-identical to the unbalanced bank's.
+
+    Pure ``jnp`` (stable argsort + row gathers): callable both host-side at
+    format-build time and inside a jit trace.  Balancing an already-balanced
+    bank composes the permutations (idempotent in effect: the row order is
+    already sorted, so the stable argsort is the identity).
+    """
+    order = jnp.argsort(-ell.nnz, stable=True).astype(jnp.int32)
+    take = lambda a: jnp.take(a, order, axis=0)  # noqa: E731
+    perm = take(ell.perm) if ell.perm is not None else order
+    return EllConv(
+        value=take(ell.value), cidx=take(ell.cidx), ridx=take(ell.ridx),
+        sidx=take(ell.sidx), offset=take(ell.offset), nnz=take(ell.nnz),
+        shape=ell.shape, perm=perm)
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    """Positions of each original row in a permuted bank: if row i of the
+    bank is original channel ``perm[i]``, then ``out[:, inv]`` restores
+    natural channel order for an output computed in bank row order."""
+    return jnp.argsort(perm).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,8 @@ import numpy as np
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.core.sparse_format import (balance_ell_conv, ell_from_dense,
+                                      ell_from_dense_conv)
 from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
                                   ReluOp, ResidualAddOp)
 from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
@@ -81,6 +82,10 @@ class CnnEngine:
     ``fuse=None`` (default) fuses the Pallas epilogue in-kernel (and honors
     each plan entry's ``fuse`` flag under ``method="auto"``); ``fuse=False``
     forces the unfused three-pass epilogue — the benchmark baseline.
+    Plan entries' ``pipeline`` (double-buffered halo DMA) and ``permute``
+    (nnz-balanced bank) flags are honored under ``method="auto"``; plain
+    ``method="pallas"`` lets ``ops.sparse_conv`` auto-enable the pipeline
+    whenever the second halo buffer fits VMEM.
     """
 
     def __init__(self, program: Program, params: Dict[str, Any],
@@ -127,16 +132,25 @@ class CnnEngine:
               method: str, plan, fuse_override: Optional[bool]) -> jax.Array:
         entry = self.params[op.name]
         tm = te = tf = None
+        pipeline = None  # ops.sparse_conv auto-picks when the 2nd halo fits
+        permute = False
         fuse = True if fuse_override is None else fuse_override
         if method == "auto":
             pe = (plan or {}).get(op.name)
             method = pe.method if pe is not None else "dense"
             if pe is not None:
                 tm, te, tf = pe.tm, pe.te, pe.tf
+                pipeline, permute = pe.pipeline, pe.permute
                 if fuse_override is None:
                     fuse = pe.fuse
             ell = entry.get("ell_auto", entry.get("ell"))
             ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
+            if (permute and method == "pallas" and ell is not None
+                    and ell.perm is None):
+                # Plan wants the nnz-balanced bank but the params carry a
+                # natural-order one (apply_plan_to_params not run): balance
+                # in-trace — pure gathers, jit-safe.
+                ell = balance_ell_conv(ell)
         else:
             ell, ell2d = entry.get("ell"), entry.get("ell2d")
         b = entry["b"]
@@ -153,9 +167,10 @@ class CnnEngine:
                 return pallas_sparse_conv(
                     x, ell, stride=op.stride, padding=op.pad, tm=tm, te=te,
                     tf=tf, bias=b, fuse_relu=op.fuse_relu, residual=res,
-                    interpret=interp)
+                    pipeline=pipeline, interpret=interp)
             y = pallas_sparse_conv(x, ell, stride=op.stride, padding=op.pad,
-                                   tm=tm, te=te, tf=tf, interpret=interp)
+                                   tm=tm, te=te, tf=tf, pipeline=pipeline,
+                                   interpret=interp)
         else:
             raise ValueError(method)
         # Unfused epilogue: the exact op sequence of the pre-engine executor.

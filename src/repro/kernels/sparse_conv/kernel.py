@@ -23,11 +23,26 @@ Spatial tiling: the grid is (N, ceil(E/TE), ceil(F/TF), M/TM).  Each spatial
 cell stages a *halo'd* input block of ``(TE-1)*stride + R`` by
 ``(TF-1)*stride + S`` rows/cols — overlapping blocks cannot be expressed with
 blocked BlockSpecs, so the input stays in HBM (``memory_space=ANY``) and the
-kernel issues an explicit sliced DMA into a VMEM scratch buffer, guarded by
-``mt == 0`` so the channel-tile loop (the innermost grid dimension) reuses
-the staged block.  This removes the whole-padded-image-in-VMEM restriction:
-arbitrarily large feature maps run through the kernel as long as one halo'd
-block fits the budget.
+kernel issues an explicit sliced DMA into VMEM scratch.  This removes the
+whole-padded-image-in-VMEM restriction: arbitrarily large feature maps run
+through the kernel as long as one halo'd block fits the budget.
+
+Double-buffered halo DMA pipeline (``pipeline=True``): the blocking schedule
+staged each cell's block with ``start(); wait()`` back to back, so the VPU
+idled for the entire HBM->VMEM copy of every spatial cell.  The pipelined
+schedule allocates **two** halo scratch buffers with per-buffer DMA
+semaphores and software-pipelines the grid: on the *last* channel tile of
+spatial cell *i* the kernel resolves the (image, et, ft) indices of cell
+*i+1* from its linearised cell id and kicks off that cell's DMA into the
+other buffer, so the copy flies while cell *i*'s remaining FMA work (and
+cell *i+1*'s first channel tile's SMEM decode) executes.  Cell *i+1* then
+only *waits* on its semaphore at ``mt == 0`` — by which point the copy has
+had a full channel-tile loop to complete.  Buffers alternate by cell parity
+(consecutive linear cells never share a slot), and the warm-up DMA for cell
+0 is issued (then immediately waited) at the first grid step, which is the
+one copy the pipeline cannot hide.  ``pipeline=False`` keeps the
+single-buffer blocking schedule for tilings where doubling the halo block
+would bust VMEM.
 
 Strides: each nonzero reads a dynamic-start window of extent
 ``(T-1)*stride + 1`` and applies a *static* ``[::stride]`` slice — the same
@@ -44,6 +59,13 @@ Index packing: each nonzero's (c, r, s) is packed into one int32 as
 kernel decodes with two divmods (scalar ALU, off the critical VPU path).
 This is exactly the paper's *weight stretching* trade-off: more index
 arithmetic in exchange for fewer memory bytes.
+
+Load balancing: the kernel itself is permutation-agnostic — feed it an
+nnz-balanced bank (``core/sparse_format.py:balance_ell_conv``, rows sorted
+by descending nnz) and each TM-tile's unrolled channel loop runs rows of
+near-equal length instead of being bounded by its worst row; ``ops.py``
+applies the inverse permutation to the output (and the forward permutation
+to bias/residual) so callers never see the reordering.
 
 Fused epilogue: the per-channel bias rides along as a third scalar-prefetch
 operand (f32 in SMEM, one scalar per output channel) and is added to the f32
@@ -70,7 +92,8 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
             val_ref,                     # VMEM in
             *rest,                       # [res_ref,] out_ref, scratch, sem
             tm: int, rs: int, s: int, stride: int, te: int, tf: int,
-            halo_h: int, halo_w: int, fuse_relu: bool, has_res: bool):
+            halo_h: int, halo_w: int, fuse_relu: bool, has_res: bool,
+            pipeline: bool, et_n: int, ft_n: int, n_cells: int):
     if has_res:
         res_ref, out_ref, xblk_ref, sem = rest
     else:
@@ -80,18 +103,57 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
     et = pl.program_id(1)
     ft = pl.program_id(2)
     mt = pl.program_id(3)
+    mt_n = pl.num_programs(3)
 
-    # Stage the halo'd input block once per (image, spatial tile); the
-    # channel-tile loop is the innermost grid dim, so the block persists in
-    # scratch across every mt of this cell (TPU grids run sequentially).
-    @pl.when(mt == 0)
-    def _stage():
-        dma = pltpu.make_async_copy(
-            x_ref.at[ni, :, pl.ds(et * te * stride, halo_h),
-                     pl.ds(ft * tf * stride, halo_w)],
-            xblk_ref, sem)
-        dma.start()
-        dma.wait()
+    if pipeline:
+        # Linearised spatial-cell id; buffers alternate by cell parity, so
+        # the prefetch for cell i+1 never lands in the buffer cell i reads.
+        cell = (ni * et_n + et) * ft_n + ft
+        slot = lax.rem(cell, 2)
+
+        def cell_dma(slot_i, ni_i, et_i, ft_i):
+            return pltpu.make_async_copy(
+                x_ref.at[ni_i, :, pl.ds(et_i * te * stride, halo_h),
+                         pl.ds(ft_i * tf * stride, halo_w)],
+                xblk_ref.at[slot_i], sem.at[slot_i])
+
+        @pl.when(mt == 0)
+        def _arrive():
+            # Warm-up: cell 0 has no predecessor to prefetch it, so its
+            # copy is issued here — the one DMA the pipeline cannot hide.
+            @pl.when(cell == 0)
+            def _warmup():
+                cell_dma(slot, ni, et, ft).start()
+            # Every other cell's DMA was started on the predecessor's last
+            # channel tile; the shape-matched descriptor waits it out.
+            cell_dma(slot, ni, et, ft).wait()
+
+        @pl.when(jnp.logical_and(mt == mt_n - 1, cell + 1 < n_cells))
+        def _prefetch():
+            # Resolve the successor cell's (image, et, ft) in-kernel from
+            # its linear id and start its copy into the *other* buffer while
+            # this cell's remaining FMA work computes.
+            nxt = cell + 1
+            ni2 = nxt // (et_n * ft_n)
+            rem2 = lax.rem(nxt, et_n * ft_n)
+            et2 = rem2 // ft_n
+            ft2 = lax.rem(rem2, ft_n)
+            cell_dma(lax.rem(nxt, 2), ni2, et2, ft2).start()
+    else:
+        slot = None
+
+        # Blocking schedule: stage the halo'd block once per (image, spatial
+        # tile); the channel-tile loop is the innermost grid dim, so the
+        # block persists in scratch across every mt of this cell (TPU grids
+        # run sequentially).
+        @pl.when(mt == 0)
+        def _stage():
+            dma = pltpu.make_async_copy(
+                x_ref.at[ni, :, pl.ds(et * te * stride, halo_h),
+                         pl.ds(ft * tf * stride, halo_w)],
+                xblk_ref, sem)
+            dma.start()
+            dma.wait()
 
     # Dynamic-start window extent for a static [::stride] landing exactly on
     # the TE (resp. TF) output positions of this tile.
@@ -107,7 +169,10 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
             rem = packed - c * rs
             r = rem // s
             ss = rem - r * s
-            win = xblk_ref[c, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
+            if pipeline:
+                win = xblk_ref[slot, c, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
+            else:
+                win = xblk_ref[c, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
             win = win[::stride, ::stride]
             return acc + val_ref[ml, kk].astype(jnp.float32) * win.astype(jnp.float32)
 
@@ -130,13 +195,13 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
 @functools.partial(
     jax.jit,
     static_argnames=("tm", "k", "rs", "s", "e", "f", "stride", "te", "tf",
-                     "fuse_relu", "interpret"))
+                     "fuse_relu", "pipeline", "interpret"))
 def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                        nnz: jax.Array, bias: jax.Array,
                        residual: jax.Array | None = None, *, tm: int, k: int,
                        rs: int, s: int, e: int, f: int, stride: int = 1,
                        te: int | None = None, tf: int | None = None,
-                       fuse_relu: bool = False,
+                       fuse_relu: bool = False, pipeline: bool = False,
                        interpret: bool = False) -> jax.Array:
     """Launch the spatially-tiled direct sparse conv kernel.
 
@@ -150,19 +215,30 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                   then a bitwise no-op).
       residual:   optional (N, M, E, F) shortcut accumulated before the ReLU
                   (bottleneck tail), blocked like the output tile.
-      tm:         output-channel tile (VMEM/occupancy knob).
+      tm:         output-channel tile (VMEM/occupancy knob); must divide M.
       e, f:       output spatial dims ((Hp - R) // stride + 1 etc.).
       stride:     conv stride (>= 1), applied in-kernel.
       te, tf:     output spatial tile dims (default: whole output, i.e. the
                   untiled schedule).  Need not divide e/f — edge tiles are
                   handled by ceiling-division grids + masked writes.
       fuse_relu:  clamp the accumulator in-kernel (the fused epilogue).
+      pipeline:   double-buffer the halo DMA — two scratch buffers, the copy
+                  for spatial cell i+1 issued while cell i computes — at the
+                  cost of a second halo-block's VMEM.  False keeps the
+                  single-buffer blocking schedule.
 
     Returns: (N, M, E, F) float32.
     """
     n, c, hp, wp = xpad.shape
     m = value.shape[0]
-    assert m % tm == 0, (m, tm)
+    if tm < 1 or m % tm:
+        # A stale tuned plan (or caller typo) must surface loudly even under
+        # ``python -O`` — an assert would vanish and the BlockSpecs would
+        # silently mis-tile the channel axis.
+        raise ValueError(
+            f"channel tile tm={tm} does not divide M={m} "
+            f"(geometry: n={n} c={c} hp={hp} wp={wp} k={k} rs={rs} "
+            f"stride={stride} e={e} f={f})")
     te = e if te is None else min(te, e)
     tf = f if tf is None else min(tf, f)
     r = rs // s
@@ -188,10 +264,18 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
         in_specs.append(pl.BlockSpec(
             (1, tm, te, tf), lambda ni, et, ft, mt, *_: (ni, mt, et, ft)))
         inputs.append(residual)
+    if pipeline:
+        scratch = [pltpu.VMEM((2, c, halo_h, halo_w), xpad.dtype),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        scratch = [pltpu.VMEM((c, halo_h, halo_w), xpad.dtype),
+                   pltpu.SemaphoreType.DMA]
     return pl.pallas_call(
         functools.partial(_kernel, tm=tm, rs=rs, s=s, stride=stride,
                           te=te, tf=tf, halo_h=halo_h, halo_w=halo_w,
-                          fuse_relu=fuse_relu, has_res=has_res),
+                          fuse_relu=fuse_relu, has_res=has_res,
+                          pipeline=pipeline, et_n=et_n, ft_n=ft_n,
+                          n_cells=n * et_n * ft_n),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
@@ -199,10 +283,7 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
             out_specs=pl.BlockSpec(
                 (1, tm, te, tf),
                 lambda ni, et, ft, mt, *_: (ni, mt, et, ft)),
-            scratch_shapes=[
-                pltpu.VMEM((c, halo_h, halo_w), xpad.dtype),
-                pltpu.SemaphoreType.DMA,
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((n, m, e, f), jnp.float32),
         interpret=interpret,

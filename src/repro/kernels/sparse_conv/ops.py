@@ -4,11 +4,17 @@ Handles: input padding (pad_in), index packing, tile selection — output
 channels ``tm`` and output spatial tiles ``(te, tf)``, the paper's
 kernel-customisation table — dtype policy (bf16/f32 in, f32 accumulate),
 the fused epilogue (bias / ReLU / bottleneck residual applied to the f32
-accumulator in-kernel, one output write instead of three HBM passes), and
-the fallback to the pure-JAX direct path for layers whose packed index
-array busts the SMEM budget or for which no VMEM-feasible tiling exists —
-the fallback applies the same epilogue unfused, so ``sparse_conv`` is a
-complete conv+epilogue operator either way.
+accumulator in-kernel, one output write instead of three HBM passes), the
+halo DMA schedule (``pipeline=True`` double-buffers the staged input block
+so the copy for spatial cell i+1 overlaps cell i's compute; auto-enabled
+whenever the second halo buffer fits VMEM), nnz-balanced banks (an
+``EllConv`` carrying a row permutation runs the kernel in balanced row
+order — bias/residual are permuted in, the output is inverse-permuted
+back, so callers never see the reordering), and the fallback to the
+pure-JAX direct path for layers whose packed index array busts the SMEM
+budget or for which no VMEM-feasible tiling exists — the fallback applies
+the same epilogue unfused, so ``sparse_conv`` is a complete conv+epilogue
+operator either way.
 
 Strided layers and feature maps larger than VMEM run through the Pallas
 kernel: the kernel tiles the output spatially with halo'd input blocks and
@@ -24,13 +30,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.direct_conv import direct_sparse_conv, out_spatial
-from repro.core.sparse_format import EllConv, ell_from_dense_conv
+from repro.core.sparse_format import (EllConv, ell_from_dense_conv,
+                                      inverse_permutation)
 from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 
 # VMEM budget the autotuner packs blocks into (bytes).  v5e has ~16 MiB of
 # VMEM per core; leave headroom for Mosaic's own buffers and semaphores.
 _VMEM_BUDGET = 12 * 1024 * 1024
-# SMEM budget for the scalar-prefetched packed index array + f32 bias row.
+# SMEM budget for the scalar-prefetched operands: packed index array + int32
+# nnz row + f32 bias row.
 _SMEM_BUDGET = 2 * 1024 * 1024
 
 # Public aliases consumed by repro.tuning (candidate-space pruning).
@@ -48,8 +56,11 @@ def halo_extent(t: int, stride: int, r: int) -> int:
 
 
 def smem_fits(m: int, k: int) -> bool:
-    """Packed indices (M*K int32) + per-channel f32 bias fit the SMEM budget."""
-    return m * k * 4 + m * 4 <= _SMEM_BUDGET
+    """All three scalar-prefetched operands fit the SMEM budget: packed
+    indices (M*K int32), the int32 nnz row (M*4 — the kernel's per-row loop
+    bounds; omitting it used to let index-heavy layers overshoot), and the
+    f32 bias row (M*4)."""
+    return m * k * 4 + m * 4 + m * 4 <= _SMEM_BUDGET
 
 
 def spatial_candidates(e: int) -> List[int]:
@@ -85,13 +96,19 @@ def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
 
 def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                 stride: int, tm: int, te: int, tf: int,
-                fuse_res: bool = False) -> bool:
+                fuse_res: bool = False, pipeline: bool = False) -> bool:
     """Whether one (tm, te, tf) tiling's working set — halo'd input block +
     value block + f32 out tile (+ the residual input tile when the fused
-    epilogue accumulates a shortcut) — fits the VMEM budget."""
+    epilogue accumulates a shortcut) — fits the VMEM budget.
+
+    ``pipeline=True`` accounts the double-buffered halo DMA schedule: two
+    halo-block scratch buffers are live at once (the one being computed on
+    and the one being prefetched), so the staged-input term doubles."""
     if tm < 1 or m % tm:
         return False
     x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
+    if pipeline:
+        x_bytes *= 2
     out_bytes = tm * te * tf * 4
     res_bytes = out_bytes if fuse_res else 0
     return x_bytes + tm * k * 4 + out_bytes + res_bytes <= _VMEM_BUDGET
@@ -100,7 +117,7 @@ def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
 def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                     stride: int = 1,
                     tms: Optional[Tuple[int, ...]] = None,
-                    fuse_res: bool = False,
+                    fuse_res: bool = False, pipeline: bool = False,
                     ) -> List[Tuple[int, int, int]]:
     """All (tm, te, tf) tilings whose VMEM working set fits, preferred first.
 
@@ -109,14 +126,15 @@ def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     fits, the first candidate is the old untiled schedule with the largest
     feasible channel tile.  ``tms`` overrides the channel-tile ladder (e.g.
     a caller-pinned tm that the ladder doesn't contain); ``fuse_res``
-    reserves VMEM for the fused epilogue's residual input tile.
+    reserves VMEM for the fused epilogue's residual input tile; ``pipeline``
+    for the double-buffered halo schedule's second scratch block.
     """
     out: List[Tuple[int, int, int]] = []
     for te in spatial_candidates(e):
         for tf in spatial_candidates(f):
             for tm in (tms or _TM_LADDER):
                 if tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                               fuse_res=fuse_res):
+                               fuse_res=fuse_res, pipeline=pipeline):
                     out.append((tm, te, tf))
 
     def pref(cand: Tuple[int, int, int]) -> Tuple[int, int, int]:
@@ -182,6 +200,7 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
                 te: Optional[int] = None, tf: Optional[int] = None,
                 bias: Optional[jax.Array] = None, fuse_relu: bool = False,
                 residual: Optional[jax.Array] = None,
+                pipeline: Optional[bool] = None,
                 interpret: bool = False) -> jax.Array:
     """Direct sparse convolution + fused epilogue, Pallas-accelerated.
 
@@ -191,15 +210,35 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
     the ``repro.tuning`` autotuner turns.  ``bias`` (per-channel),
     ``fuse_relu`` and ``residual`` (a shortcut tensor shaped like the
     output) execute in-kernel on the f32 accumulator so the output is
-    written to HBM exactly once.  Falls back to the pure-JAX direct path —
-    with the identical epilogue applied unfused — only when the packed
-    index array busts the SMEM budget or no VMEM-feasible tiling exists.
+    written to HBM exactly once.
+
+    ``pipeline`` selects the halo DMA schedule: ``True`` double-buffers the
+    staged input block (the copy for spatial cell i+1 overlaps cell i's
+    compute), ``False`` forces the single-buffer blocking schedule, and
+    ``None`` (default) auto-enables double buffering whenever the second
+    halo block also fits VMEM.  A requested ``pipeline=True`` that busts
+    the budget silently drops to the single-buffer path — same math,
+    blocking staging — never to the pure-JAX fallback.
+
+    An nnz-balanced bank (``ell.perm`` set, see
+    ``core.sparse_format.balance_ell_conv``) runs the kernel in balanced
+    row order: bias/residual are gathered into bank order on the way in and
+    the output is inverse-permuted on the way out, so results are
+    bit-identical to the natural-order bank (per-row accumulation order is
+    untouched).  Falls back to the pure-JAX direct path — with the
+    identical epilogue applied unfused — only when the packed index array
+    busts the SMEM budget or no VMEM-feasible tiling exists.
     """
     m, c, r, s = ell.shape
     k = ell.k
+    inv = inverse_permutation(ell.perm) if ell.perm is not None else None
 
     def fallback() -> jax.Array:
         y = direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        if inv is not None:
+            # The bank's rows are in balanced order; restore channel order
+            # before the (caller-ordered) epilogue.
+            y = jnp.take(y, inv, axis=1)
         return apply_epilogue(y, bias, fuse_relu, residual)
 
     if not smem_fits(m, k):
@@ -230,13 +269,27 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
             # the XLA-scheduled direct path.
             return fallback()
         tm, te, tf = cands[0]
+    # Halo DMA schedule: double-buffer when allowed *and* the second halo
+    # scratch block fits; otherwise the single-buffer blocking path.
+    if pipeline is None or pipeline:
+        pipeline = tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                               fuse_res=fuse_res, pipeline=True)
     xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
     b = (jnp.zeros((m,), jnp.float32) if bias is None
          else jnp.asarray(bias, jnp.float32))
+    res = residual
+    if ell.perm is not None:
+        # Balanced bank: the kernel computes bank-row-ordered output, so its
+        # per-row epilogue operands must be gathered into bank order too.
+        b = jnp.take(b, ell.perm, axis=0)
+        if res is not None:
+            res = jnp.take(res, ell.perm, axis=1)
     out = sparse_conv_pallas(
-        xpad, ell.value, pack_indices(ell), ell.nnz, b, residual,
+        xpad, ell.value, pack_indices(ell), ell.nnz, b, res,
         tm=tm, k=k, rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
-        fuse_relu=fuse_relu, interpret=interpret)
+        fuse_relu=fuse_relu, pipeline=pipeline, interpret=interpret)
+    if inv is not None:
+        out = jnp.take(out, inv, axis=1)
     return out.astype(x.dtype)
 
 

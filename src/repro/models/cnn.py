@@ -7,9 +7,13 @@ selectable method (paper Table/Figs 8-11):
   "lowered"    -- im2col + ELL(CSR) SpMM                  (CUSPARSE analogue)
   "csr-direct" -- Escoin direct sparse conv, pure-JAX scan
   "pallas"     -- Escoin direct sparse conv, Pallas kernel (interpret on CPU)
-                  with the bias/ReLU/shortcut epilogue fused in-kernel
+                  with the bias/ReLU/shortcut epilogue fused in-kernel and
+                  the halo DMA double-buffered whenever it fits VMEM
   "auto"       -- per-layer dispatch through a tuned plan from repro.tuning
-                  (the paper's kernel customization, measurement-driven)
+                  (the paper's kernel customization, measurement-driven);
+                  plan entries carry the full schedule: method, (tm, te,
+                  tf) tiling, pad_to, fused epilogue, pipelined staging,
+                  and nnz-balanced channel packing
 
 Execution goes through the compile-once graph engine (``repro.engine``):
 the nested spec is lowered exactly once into a flat typed op program —

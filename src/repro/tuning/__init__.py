@@ -3,12 +3,15 @@
 Per-layer method/tile selection, measurement-driven with an analytical
 roofline fallback, persisted to a JSON plan cache:
 
-  space    -- candidate enumeration (method x (tm, te, tf) x pad_to x fuse)
-              from geometry; spatial tiles come from the kernel's
-              halo'd-block VMEM feasibility model, the fuse axis from the
-              conv's lowered epilogue (bias/ReLU/shortcut in-kernel)
+  space    -- candidate enumeration (method x (tm, te, tf) x pad_to x fuse
+              x pipeline x permute) from geometry; spatial tiles come from
+              the kernel's halo'd-block VMEM feasibility model (pipelined
+              tilings reserve the second halo buffer), the fuse axis from
+              the conv's lowered epilogue (bias/ReLU/shortcut in-kernel)
   measure  -- wall-clock timing + roofline scoring of candidates (the
-              roofline credits the fused epilogue's saved output passes)
+              roofline credits the fused epilogue's saved output passes,
+              the pipelined schedule's overlapped staging bytes, and the
+              balanced bank's equalised channel tiles)
   cache    -- versioned JSON plan cache keyed on geometry/epilogue/sparsity/
               dtype/backend
   planner  -- plans the engine's lowered program (one ConvOp at a time)
@@ -16,8 +19,9 @@ roofline fallback, persisted to a JSON plan cache:
 """
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key, sparsity_bucket
 from repro.tuning.measure import (epilogue_bytes, measurable,
-                                  measure_candidate, roofline_estimate,
-                                  time_fn)
+                                  measure_candidate, permute_bytes,
+                                  roofline_estimate, staged_input_bytes,
+                                  staging_stall_s, time_fn)
 from repro.tuning.planner import (apply_plan_to_params, format_plan,
                                   geometry_for, geometry_of_op, plan_layer,
                                   plan_network, plan_program)
@@ -29,6 +33,7 @@ __all__ = [
     "PlanEntry", "apply_plan_to_params", "enumerate_candidates",
     "epilogue_bytes", "format_plan", "geometry_for", "geometry_of_op",
     "layer_key", "measurable", "measure_candidate", "pallas_feasible",
-    "plan_layer", "plan_network", "plan_program", "roofline_estimate",
-    "sparsity_bucket", "time_fn",
+    "permute_bytes", "plan_layer", "plan_network", "plan_program",
+    "roofline_estimate", "sparsity_bucket", "staged_input_bytes",
+    "staging_stall_s", "time_fn",
 ]

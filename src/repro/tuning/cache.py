@@ -9,18 +9,24 @@ models share one entry.
 
 Format (``docs/autotuning.md`` documents it for humans):
 
-    {"version": 3,
+    {"version": 4,
      "entries": {"<key>": {"method": "pallas", "tm": 64, "te": 32, "tf": 32,
-                           "pad_to": 8, "fuse": true, "est_s": 1.2e-4,
+                           "pad_to": 8, "fuse": true, "pipeline": true,
+                           "permute": false, "est_s": 1.2e-4,
                            "source": "roofline"}}}
 
-Version history: v3 added the ``fuse`` flag (in-kernel epilogue: bias /
-ReLU / bottleneck shortcut applied to the f32 accumulator) to pallas
-entries; v2 added the output spatial tile ``(te, tf)``.  Older documents
-load via migration — v1 entries get ``te = tf = None`` (the untiled
-schedule the v1 kernel executed), and v1/v2 entries get ``fuse = False``
-(those kernels always ran the unfused three-pass epilogue) — and are
-re-persisted as v3 on the next save.
+Version history: v4 added the halo DMA schedule ``pipeline``
+(double-buffered staging: cell i+1's input block copies while cell i
+computes) and ``permute`` (nnz-balanced bank with the inverse permutation
+applied to the output) to pallas entries; v3 added the ``fuse`` flag
+(in-kernel epilogue: bias / ReLU / bottleneck shortcut applied to the f32
+accumulator); v2 added the output spatial tile ``(te, tf)``.  Older
+documents load via migration — v1 entries get ``te = tf = None`` (the
+untiled schedule the v1 kernel executed), v1/v2 entries get ``fuse =
+False`` (those kernels always ran the unfused three-pass epilogue), and
+v1-v3 entries get ``pipeline = permute = False`` (those kernels always
+staged with a blocking single-buffer DMA over natural-order banks) — and
+are re-persisted as v4 on the next save.
 """
 from __future__ import annotations
 
@@ -31,9 +37,9 @@ from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
 
-CACHE_VERSION = 3
+CACHE_VERSION = 4
 # Older schema versions load() can migrate in-memory (see module docstring).
-MIGRATABLE_VERSIONS = (1, 2)
+MIGRATABLE_VERSIONS = (1, 2, 3)
 
 # Sparsity bucket width for cache keys: layers within 5% density share plans.
 SPARSITY_BUCKET = 0.05
@@ -49,26 +55,34 @@ class PlanEntry:
     te: Optional[int] = None      # output spatial tile (None: untiled)
     tf: Optional[int] = None
     fuse: bool = False            # pallas: in-kernel epilogue
+    pipeline: bool = False        # pallas: double-buffered halo DMA
+    permute: bool = False         # pallas: nnz-balanced bank
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
 
     @property
     def candidate(self) -> Candidate:
         return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to,
-                         te=self.te, tf=self.tf, fuse=self.fuse)
+                         te=self.te, tf=self.tf, fuse=self.fuse,
+                         pipeline=self.pipeline, permute=self.permute)
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
                 "te": self.te, "tf": self.tf, "fuse": self.fuse,
+                "pipeline": self.pipeline, "permute": self.permute,
                 "est_s": self.est_s, "source": self.source}
 
     @classmethod
     def from_dict(cls, d: dict) -> "PlanEntry":
-        # v1/v2 migration: absent te/tf means the untiled schedule, absent
-        # fuse means the unfused three-pass epilogue those kernels ran.
+        # Migration: absent te/tf means the untiled schedule (v1), absent
+        # fuse the unfused three-pass epilogue (v1/v2), absent
+        # pipeline/permute the blocking single-buffer DMA over a
+        # natural-order bank (v1-v3) — each the schedule those kernels ran.
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
                    te=d.get("te"), tf=d.get("tf"),
                    fuse=bool(d.get("fuse", False)),
+                   pipeline=bool(d.get("pipeline", False)),
+                   permute=bool(d.get("permute", False)),
                    est_s=float(d.get("est_s", 0.0)),
                    source=d.get("source", "heuristic"))
 
@@ -115,10 +129,10 @@ class PlanCache:
                 f"plan cache {path} has version {version!r}, "
                 f"expected {CACHE_VERSION} (or migratable "
                 f"{MIGRATABLE_VERSIONS})")
-        # v1/v2 migration happens in from_dict: absent te/tf default to None
-        # (the untiled schedule) and absent fuse to False (the unfused
-        # epilogue those kernels ran).  save() re-persists as the current
-        # version.
+        # v1-v3 migration happens in from_dict: absent te/tf default to None
+        # (the untiled schedule), absent fuse to False (the unfused
+        # epilogue), and absent pipeline/permute to False (blocking DMA,
+        # natural row order).  save() re-persists as the current version.
         self.entries = {k: PlanEntry.from_dict(v)
                         for k, v in doc.get("entries", {}).items()}
         return self

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
-from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.core.sparse_format import (balance_ell_conv, ell_from_dense,
+                                      ell_from_dense_conv)
 from repro.kernels.sparse_conv.ops import (apply_epilogue, halo_extent,
                                            sparse_conv)
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
@@ -71,6 +72,78 @@ def epilogue_bytes(g: ConvGeometry, fused: bool) -> float:
     return extra
 
 
+def permute_bytes(g: ConvGeometry, permuted: bool) -> float:
+    """HBM traffic the nnz-balanced bank's inverse output permutation costs:
+    one read + one write of the f32 output tensor (the gather restoring
+    natural channel order), plus the permutation row itself."""
+    if not permuted:
+        return 0.0
+    return 2.0 * g.batch * g.m * g.e * g.f * 4 + g.m * 4
+
+
+def staged_input_bytes(g: ConvGeometry, cand: Candidate) -> float:
+    """Input bytes the Pallas kernel stages HBM->VMEM over the whole launch:
+    one halo'd block per (image, spatial-tile) grid cell.  Smaller (te, tf)
+    tiles re-fetch more halo overlap — the tuner's main spatial signal."""
+    e, f = g.e, g.f
+    itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    te = min(cand.te or e, e)
+    tf = min(cand.tf or f, f)
+    halo_h = halo_extent(te, g.stride, g.r)
+    halo_w = halo_extent(tf, g.stride, g.s)
+    cells = ((e + te - 1) // te) * ((f + tf - 1) // tf)
+    return float(g.batch * cells * g.c * halo_h * halo_w * itemsize)
+
+
+def _pallas_terms(g: ConvGeometry, cand: Candidate):
+    """(compute_s, staged_s, other_mem_s) for one pallas candidate.
+
+    Compute: the kernel's per-row loop is bounded by that row's true nnz
+    and the TM-tile's rows execute sequentially on the TPU's single
+    sequential grid, so tile compute is the *sum* of row nnz — invariant
+    under row permutation.  The analytic bound is therefore the true flop
+    count for balanced and natural-order banks alike; ``permute`` only
+    shows up on the memory side (the inverse-permutation gather,
+    :func:`permute_bytes`).  Any scheduling benefit of near-equal rows per
+    unrolled tile (the GPU-side balancing win of Yao et al.,
+    arXiv:1811.00206) is below this model's resolution — wall-mode tuning
+    is what can detect it.  Other memory: output + ELL + epilogue (+ the
+    permute gather's output round-trip).
+    """
+    n, m = g.batch, g.m
+    e, f = g.e, g.f
+    itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    k_pad = g.k_est(cand.pad_to or 8)
+    nnz = float(m * g.row_nnz_est)
+    fl = 2.0 * n * nnz * e * f
+    dout = float(n * m * e * f * 4)
+    ell_bytes = float(m * k_pad * (itemsize + 4))
+    other = (dout + ell_bytes + epilogue_bytes(g, fused=cand.fuse)
+             + permute_bytes(g, cand.permute))
+    return (fl / PEAK_FLOPS, staged_input_bytes(g, cand) / HBM_BW,
+            other / HBM_BW)
+
+
+def staging_stall_s(g: ConvGeometry, cand: Candidate) -> float:
+    """Seconds the VPU idles waiting on staged-input DMA under this schedule.
+
+    Blocking (``pipeline=False``): every cell's halo copy is a
+    ``start(); wait()`` pair — the VPU idles for the entire copy, so the
+    full staged-input time is exposed.  Double-buffered
+    (``pipeline=True``): each cell's copy flies behind the previous cell's
+    FMA work, so the VPU only waits for the part of the copy that outlasts
+    compute.  Strictly smaller than the blocking stall whenever there is
+    any compute to hide behind (always, for a nonzero filter bank).  Note
+    this is a VPU-wait metric, not a total-time delta: the copied bytes
+    still cross the shared HBM bus, which :func:`roofline_estimate` keeps
+    in the memory term for both schedules.
+    """
+    t_fl, t_stage, _ = _pallas_terms(g, cand)
+    if not cand.pipeline:
+        return t_stage
+    return max(0.0, t_stage - t_fl)
+
+
 def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     """max(compute, memory) time bound for one candidate, in seconds.
 
@@ -87,7 +160,21 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
                   reused across channel tiles: smaller (te, tf) tiles cost
                   more halo re-fetch (the tuner's main spatial signal),
                   while the nnz loop bound skips padding, so padded K costs
-                  no flops.
+                  no flops (see :func:`_pallas_terms` for why the bound is
+                  permutation-invariant; an nnz-balanced ``permute`` bank
+                  additionally pays the inverse-permutation gather,
+                  :func:`permute_bytes`).  The halo DMA schedule decides
+                  how staging composes: blocking stages with
+                  ``start(); wait()``, so the VPU idles for every copy and
+                  the bound is ``staged + max(compute, other-traffic)``;
+                  double-buffered (``pipeline``) staging overlaps the
+                  copies with compute, recovering the classic
+                  ``max(compute, staged + other-traffic)`` — staging and
+                  other traffic still *sum* in the memory term (they share
+                  the HBM bus; overlap hides latency, it does not
+                  manufacture bandwidth).  The recovered VPU idle time is
+                  the pipeline's roofline credit (:func:`staging_stall_s`
+                  exposes each schedule's stall for the bench tables).
 
     Every method additionally pays its epilogue traffic
     (:func:`epilogue_bytes`): the unfused bias/ReLU/shortcut passes for
@@ -102,7 +189,6 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     din = float(n * c * g.hp * g.wp * itemsize)
     dout = float(n * m * e * f * 4)          # f32 accumulate
     dense_fl = 2.0 * n * m * c * rs * e * f
-    nnz = float(m * g.row_nnz_est)           # true nonzeros (est.)
     ep_unfused = epilogue_bytes(g, fused=False)
     if cand.method == "dense":
         return max(dense_fl / PEAK_FLOPS,
@@ -110,7 +196,6 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     k_pad = g.k_est(cand.pad_to or 8)
     ell_bytes = float(m * k_pad * (itemsize + 4))  # value + packed index
     padded_fl = 2.0 * n * m * k_pad * e * f
-    true_fl = 2.0 * n * nnz * e * f
     if cand.method == "lowered":
         im2col = float(n * c * rs * e * f * itemsize)
         return max(padded_fl / PEAK_FLOPS,
@@ -119,15 +204,13 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
         return max(padded_fl / PEAK_FLOPS,
                    (din + dout + ell_bytes + ep_unfused) / HBM_BW)
     if cand.method == "pallas":
-        te = min(cand.te or e, e)
-        tf = min(cand.tf or f, f)
-        halo_h = halo_extent(te, g.stride, g.r)
-        halo_w = halo_extent(tf, g.stride, g.s)
-        cells = ((e + te - 1) // te) * ((f + tf - 1) // tf)
-        din_staged = float(n * cells * c * halo_h * halo_w * itemsize)
-        ep = epilogue_bytes(g, fused=cand.fuse)
-        return max(true_fl / PEAK_FLOPS,
-                   (din_staged + dout + ell_bytes + ep) / HBM_BW)
+        t_fl, t_stage, t_other = _pallas_terms(g, cand)
+        if cand.pipeline:
+            # Copies overlap compute; all bytes still share HBM bandwidth.
+            return max(t_fl, t_stage + t_other)
+        # Blocking start();wait(): the VPU idles for every cell's copy, so
+        # staging serialises with the max of compute and other traffic.
+        return t_stage + max(t_fl, t_other)
     raise ValueError(cand.method)
 
 
@@ -173,15 +256,22 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
         # Both variants are wrapped in one outer jit so the unfused
         # epilogue's extra ops compile into the same dispatch as the conv —
         # anything else would bill eager-dispatch overhead to the unfused
-        # schedule and bias the fused-vs-unfused comparison.
+        # schedule and bias the fused-vs-unfused comparison.  A permute
+        # candidate runs the nnz-balanced bank (the inverse-permutation
+        # gather it pays for is inside sparse_conv, so it is timed); the
+        # pipeline flag picks the halo DMA schedule.
+        if cand.permute:
+            ell = balance_ell_conv(ell)
         if cand.fuse:
             return jax.jit(lambda x, e=ell: sparse_conv(
                 x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
                 te=cand.te, tf=cand.tf, bias=bias, fuse_relu=g.relu,
-                residual=res, interpret=interpret)), ()
+                residual=res, pipeline=cand.pipeline,
+                interpret=interpret)), ()
         return jax.jit(lambda x, e=ell: epilogue(sparse_conv(
             x, e, stride=g.stride, padding=g.pad, tm=cand.tm,
-            te=cand.te, tf=cand.tf, interpret=interpret))), ()
+            te=cand.te, tf=cand.tf, pipeline=cand.pipeline,
+            interpret=interpret))), ()
     raise ValueError(cand.method)
 
 

@@ -85,7 +85,9 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
         if t < best_t:
             best, best_t = cd, t
     return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
-                     te=best.te, tf=best.tf, fuse=best.fuse, est_s=best_t,
+                     te=best.te, tf=best.tf, fuse=best.fuse,
+                     pipeline=best.pipeline, permute=best.permute,
+                     est_s=best_t,
                      source="measured" if mode == "wall" else "roofline")
 
 
@@ -154,7 +156,9 @@ def apply_plan_to_params(params: Dict[str, Any],
     """Rebuild per-layer sparse formats at each plan's tuned ``pad_to``.
 
     Stores them under ``ell_auto`` / ``ell2d_auto`` next to the defaults, so
-    non-auto methods keep working unchanged.  Safe to call repeatedly.
+    non-auto methods keep working unchanged.  A pallas entry with
+    ``permute=True`` gets its bank nnz-balanced here, host-side, so the
+    engine never sorts inside a trace.  Safe to call repeatedly.
     """
     for name, pe in plan.items():
         entry = params.get(name)
@@ -166,18 +170,23 @@ def apply_plan_to_params(params: Dict[str, Any],
             entry["ell2d_auto"] = ell_from_dense(
                 w.reshape(w.shape[0], -1), pad_to=pad_to)
         elif pe.method in ("csr-direct", "pallas"):
-            entry["ell_auto"] = ell_from_dense_conv(w, pad_to=pad_to)
+            entry["ell_auto"] = ell_from_dense_conv(
+                w, pad_to=pad_to,
+                balance=pe.method == "pallas" and pe.permute)
     return params
 
 
 def format_plan(plan: Dict[str, PlanEntry]) -> str:
     """Human-readable per-layer plan table (the paper's customization table)."""
     lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'te':>4} {'tf':>4} "
-             f"{'pad_to':>6} {'fuse':>5} {'est_us':>10} source"]
+             f"{'pad_to':>6} {'fuse':>5} {'pipe':>5} {'perm':>5} "
+             f"{'est_us':>10} source"]
     for name, pe in plan.items():
         lines.append(
             f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
             f"{pe.te or '-':>4} {pe.tf or '-':>4} "
             f"{pe.pad_to or '-':>6} {'y' if pe.fuse else '-':>5} "
+            f"{'y' if pe.pipeline else '-':>5} "
+            f"{'y' if pe.permute else '-':>5} "
             f"{pe.est_s * 1e6:>10.1f} {pe.source}")
     return "\n".join(lines)

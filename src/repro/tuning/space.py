@@ -15,12 +15,22 @@ enumerates the discrete choices the tuner measures over:
                accumulator (one output write) instead of as separate HBM
                passes.  Fused-residual candidates must additionally fit the
                shortcut input tile in VMEM.
+  pipeline    ∈ {False, True}  (pallas only): double-buffer the halo DMA —
+               stage spatial cell i+1's input block while cell i computes —
+               at the cost of a second halo scratch block in VMEM.
+               Pipelined candidates enumerate only tilings whose *doubled*
+               halo block fits the budget.
+  permute     ∈ {False, True}  (pallas only): run an nnz-balanced bank
+               (output channels sorted by row nnz) so every TM-tile holds
+               rows of near-equal length; costs an inverse-permutation
+               gather of the output.
 
 Hardware-infeasible points are pruned statically: the Pallas kernel's packed
-index array (+ the f32 bias row) must fit the SMEM budget, and every emitted
-tiling fits VMEM (``kernels.sparse_conv.ops.tile_candidates``).  Strided
-layers are eligible — the kernel applies the stride in-kernel.  Fully-dense
-layers (sparsity == 0) only ever run dense.
+index array (+ the int32 nnz row + the f32 bias row) must fit the SMEM
+budget, and every emitted tiling fits VMEM
+(``kernels.sparse_conv.ops.tile_candidates``).  Strided layers are eligible
+— the kernel applies the stride in-kernel.  Fully-dense layers (sparsity ==
+0) only ever run dense.
 """
 from __future__ import annotations
 
@@ -104,7 +114,10 @@ class Candidate:
     tm/te/tf are only meaningful for the pallas method (te/tf = None means
     the untiled full-extent spatial schedule); pad_to only for the sparse
     formats (lowered / csr-direct / pallas); ``fuse`` only for pallas —
-    True executes the epilogue in-kernel.
+    True executes the epilogue in-kernel; ``pipeline`` only for pallas —
+    True double-buffers the halo DMA; ``permute`` only for pallas — True
+    runs an nnz-balanced bank with the inverse permutation applied to the
+    output.
     """
 
     method: str
@@ -113,16 +126,21 @@ class Candidate:
     te: Optional[int] = None
     tf: Optional[int] = None
     fuse: bool = False
+    pipeline: bool = False
+    permute: bool = False
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
-                "te": self.te, "tf": self.tf, "fuse": self.fuse}
+                "te": self.te, "tf": self.tf, "fuse": self.fuse,
+                "pipeline": self.pipeline, "permute": self.permute}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
                    te=d.get("te"), tf=d.get("tf"),
-                   fuse=bool(d.get("fuse", False)))
+                   fuse=bool(d.get("fuse", False)),
+                   pipeline=bool(d.get("pipeline", False)),
+                   permute=bool(d.get("permute", False)))
 
 
 def pallas_feasible(g: ConvGeometry, k: int) -> bool:
@@ -141,9 +159,13 @@ def enumerate_candidates(g: ConvGeometry,
     Every emitted pallas ``(tm, te, tf)`` fits the VMEM budget (via
     ``kernels.sparse_conv.ops.tile_candidates`` — the heuristic the tuner
     refines; the list is preference-sorted and capped at MAX_TILINGS); every
-    pallas candidate fits the SMEM budget.  Pallas points come in unfused
-    and fused (in-kernel epilogue) variants; fused-residual tilings reserve
-    VMEM for the shortcut input tile, so their feasible set can be smaller.
+    pallas candidate fits the SMEM budget.  Pallas points enumerate the
+    full schedule cross product: unfused and fused (in-kernel epilogue)
+    variants — fused-residual tilings reserve VMEM for the shortcut input
+    tile — each in blocking and double-buffered (``pipeline``) halo DMA
+    flavours — pipelined tilings reserve VMEM for the second halo block,
+    so their feasible sets can be smaller — and each tiling additionally in
+    an nnz-balanced (``permute``) variant.
     """
     if g.sparsity <= 0.0:
         # Dense-kept layers (paper: conv1 et al.) have no sparse format.
@@ -158,15 +180,19 @@ def enumerate_candidates(g: ConvGeometry,
         if "csr-direct" in methods:
             out.append(Candidate("csr-direct", pad_to=pad_to))
         if "pallas" in methods and smem_fits(g.m, k):
-            tilings = tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s,
-                                      g.stride)[:MAX_TILINGS]
-            for tm, te, tf in tilings:
-                out.append(Candidate("pallas", tm=tm, pad_to=pad_to,
-                                     te=te, tf=tf))
-            fused = tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s,
-                                    g.stride,
-                                    fuse_res=g.residual)[:MAX_TILINGS]
-            for tm, te, tf in fused:
-                out.append(Candidate("pallas", tm=tm, pad_to=pad_to,
-                                     te=te, tf=tf, fuse=True))
+            for fuse in (False, True):
+                # Pipelined first: the scorer keeps the earliest candidate
+                # on ties, and on memory-bound layers the two schedules'
+                # roofline totals tie while the pipelined one strictly cuts
+                # the VPU staging stall — never worse, so it wins ties.
+                for pipe in (True, False):
+                    tilings = tile_candidates(
+                        g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
+                        fuse_res=fuse and g.residual,
+                        pipeline=pipe)[:MAX_TILINGS]
+                    for tm, te, tf in tilings:
+                        for permute in (False, True):
+                            out.append(Candidate(
+                                "pallas", tm=tm, pad_to=pad_to, te=te, tf=tf,
+                                fuse=fuse, pipeline=pipe, permute=permute))
     return out

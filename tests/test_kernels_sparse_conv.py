@@ -5,12 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ell_from_dense_conv, magnitude_prune
+from repro.core import balance_ell_conv, ell_from_dense_conv, magnitude_prune
 from repro.core.direct_conv import out_spatial
 from repro.kernels.sparse_conv import ops
+from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 from repro.kernels.sparse_conv.ops import (choose_tiles, choose_tm,
-                                           sparse_conv, tile_candidates,
-                                           tm_candidates)
+                                           smem_fits, sparse_conv,
+                                           tile_candidates, tm_candidates)
 from repro.kernels.sparse_conv.ref import sparse_conv_ref
 
 pytestmark = pytest.mark.pallas
@@ -198,6 +199,210 @@ def test_vmem_infeasible_falls_back_to_direct(monkeypatch):
 
     monkeypatch.setattr(ops, "sparse_conv_pallas", _boom)
     got = sparse_conv(x, ell, padding=1, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered halo DMA pipeline: parity vs the blocking schedule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("residual", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pipelined_matches_blocking(stride, residual, dtype):
+    """Interpret-mode parity grid: the double-buffered schedule must be
+    *bit-identical* to the single-buffer one (same FMA order, different
+    staging only) across stride x residual x dtype, with edge tiles (te/tf
+    deliberately not dividing E/F) so the prefetch crosses ragged cells."""
+    import dataclasses
+    n, c, h, w, m, r, pad = 2, 4, 13, 11, 8, 3, 1
+    rng = np.random.default_rng(9000 + 100 * stride + 10 * residual
+                                + (dtype == jnp.bfloat16))
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)), dtype=dtype)
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    if dtype == jnp.bfloat16:
+        ell = dataclasses.replace(ell, value=ell.value.astype(dtype))
+    bias = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    res = (jnp.asarray(rng.standard_normal((n, m, e, f)).astype(np.float32),
+                       dtype=dtype) if residual else None)
+    te, tf = max(1, (e + 1) // 2), max(1, f // 2 + 1)   # non-dividing tiles
+    kw = dict(stride=stride, padding=pad, tm=4, te=te, tf=tf, bias=bias,
+              fuse_relu=True, residual=res, interpret=True)
+    y_block = sparse_conv(x, ell, pipeline=False, **kw)
+    y_pipe = sparse_conv(x, ell, pipeline=True, **kw)
+    np.testing.assert_array_equal(np.asarray(y_block, np.float32),
+                                  np.asarray(y_pipe, np.float32))
+    ref = sparse_conv_ref(x, jnp.asarray(wt), stride=stride, padding=pad)
+    ref = ref.astype(jnp.float32) + bias[None, :, None, None]
+    if res is not None:
+        ref = ref + res.astype(jnp.float32)
+    ref = jax.nn.relu(ref)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y_pipe, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_pipeline_auto_enabled_when_it_fits(monkeypatch):
+    """pipeline=None (default) must launch the double-buffered schedule
+    whenever the second halo buffer fits the VMEM budget."""
+    rng = np.random.default_rng(43)
+    x = jnp.asarray(rng.standard_normal((1, 4, 10, 10)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    launches = []
+    real = ops.sparse_conv_pallas
+    monkeypatch.setattr(
+        ops, "sparse_conv_pallas",
+        lambda *a, **kw: launches.append(kw) or real(*a, **kw))
+    got = sparse_conv(x, ell, padding=1, interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert launches and launches[0]["pipeline"] is True
+
+
+def test_pipeline_drops_to_single_buffer_when_double_halo_busts(monkeypatch):
+    """A requested pipeline=True whose second halo block busts VMEM must
+    run the single-buffer blocking kernel — not the pure-JAX fallback."""
+    rng = np.random.default_rng(47)
+    x = jnp.asarray(rng.standard_normal((1, 4, 16, 16)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    e = f = 16
+    tm, te, tf = 8, 16, 16
+    # Budget: exactly one halo block + values + out tile — no second buffer.
+    x_bytes = 4 * 18 * 18 * 4
+    budget = x_bytes + tm * ell.k * 4 + tm * te * tf * 4
+    monkeypatch.setattr(ops, "_VMEM_BUDGET", budget)
+    assert ops.tiling_fits(8, 4, e, f, ell.k, 3, 3, 1, tm, te, tf)
+    assert not ops.tiling_fits(8, 4, e, f, ell.k, 3, 3, 1, tm, te, tf,
+                               pipeline=True)
+    launches = []
+    real = ops.sparse_conv_pallas
+    monkeypatch.setattr(
+        ops, "sparse_conv_pallas",
+        lambda *a, **kw: launches.append(kw) or real(*a, **kw))
+    got = sparse_conv(x, ell, padding=1, tm=tm, te=te, tf=tf, pipeline=True,
+                      interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert launches and launches[0]["pipeline"] is False
+
+
+# ---------------------------------------------------------------------------
+# nnz-balanced channel packing: permuted bank is invisible to callers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_balanced_bank_output_bit_identical(stride):
+    """A permuted (nnz-balanced) ELL bank must produce *bit-identical*
+    output to the natural-order bank: row contents (and therefore each
+    row's f32 accumulation order) are untouched, only row order changes and
+    the inverse permutation restores it."""
+    n, c, h, w, m, r, pad = 2, 4, 12, 12, 16, 3, 1
+    rng = np.random.default_rng(6000 + stride)
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    bal = balance_ell_conv(ell)
+    # the permutation actually balances: nnz descending
+    nnz = np.asarray(bal.nnz)
+    assert (np.diff(nnz) <= 0).all()
+    assert sorted(np.asarray(bal.perm).tolist()) == list(range(m))
+    bias = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    res = jnp.asarray(rng.standard_normal((n, m, e, f)).astype(np.float32))
+    kw = dict(stride=stride, padding=pad, bias=bias, fuse_relu=True,
+              residual=res, interpret=True)
+    y_nat = sparse_conv(x, ell, **kw)
+    y_bal = sparse_conv(x, bal, **kw)
+    np.testing.assert_array_equal(np.asarray(y_nat), np.asarray(y_bal))
+
+
+def test_balanced_bank_fallback_unpermutes(monkeypatch):
+    """The pure-JAX fallback must also restore natural channel order for a
+    permuted bank (and apply the epilogue on the restored order)."""
+    rng = np.random.default_rng(61)
+    x = jnp.asarray(rng.standard_normal((1, 4, 10, 10)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.7))
+    bal = balance_ell_conv(ell_from_dense_conv(wt))
+    bias = jnp.asarray(rng.standard_normal((8,)).astype(np.float32))
+    monkeypatch.setattr(ops, "_VMEM_BUDGET", 1024)
+
+    def _boom(*a, **kw):
+        raise AssertionError("over-budget kernel launch")
+
+    monkeypatch.setattr(ops, "sparse_conv_pallas", _boom)
+    got = sparse_conv(x, bal, padding=1, bias=bias, fuse_relu=True,
+                      interpret=True)
+    ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
+    ref = jax.nn.relu(ref.astype(jnp.float32) + bias[None, :, None, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# regressions: SMEM accounting, non-dividing channel tiles
+# ---------------------------------------------------------------------------
+
+def test_smem_fits_budgets_nnz_row():
+    """Regression: smem_fits must account all *three* scalar-prefetched
+    operands — packed indices, the int32 nnz row, and the f32 bias row.
+    Pick (m, k) where indices + bias alone fit but adding the nnz row
+    overshoots: the old two-term check said yes and overshot SMEM."""
+    budget = ops.SMEM_BUDGET
+    m = 1024
+    # m*k*4 + m*4 <= budget < m*k*4 + 2*m*4
+    k = (budget - m * 4) // (m * 4)
+    assert m * k * 4 + m * 4 <= budget < m * k * 4 + 2 * m * 4
+    assert not smem_fits(m, k)
+    assert smem_fits(m, k - 1)
+
+
+def test_non_dividing_tm_raises_value_error():
+    """The kernel wrapper must reject a non-dividing channel tile with a
+    ValueError naming the geometry — an assert would vanish under
+    ``python -O`` and silently mis-tile."""
+    rng = np.random.default_rng(53)
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 3, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+    xpad = jnp.asarray(rng.standard_normal((1, 3, 10, 10)).astype(np.float32))
+    with pytest.raises(ValueError, match=r"tm=3 does not divide M=8"):
+        sparse_conv_pallas(
+            xpad, ell.value, ops.pack_indices(ell), ell.nnz,
+            jnp.zeros((8,), jnp.float32), tm=3, k=ell.k, rs=9, s=3,
+            e=8, f=8, interpret=True)
+
+
+def test_stale_plan_non_dividing_tm_falls_back(monkeypatch):
+    """Regression: a stale tuned plan carrying a tm that no longer divides M
+    (e.g. the layer was re-pruned to a different channel count) must fall
+    back to the pure-JAX path — never reach the kernel, even with asserts
+    stripped (``python -O``)."""
+    rng = np.random.default_rng(59)
+    x = jnp.asarray(rng.standard_normal((1, 4, 10, 10)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.7))
+    ell = ell_from_dense_conv(wt)
+
+    def _boom(*a, **kw):
+        raise AssertionError("non-dividing tm reached the kernel")
+
+    monkeypatch.setattr(ops, "sparse_conv_pallas", _boom)
+    # fully-specified stale tiling: tm=3 does not divide m=8
+    got = sparse_conv(x, ell, padding=1, tm=3, te=8, tf=8, interpret=True)
     ref = sparse_conv_ref(x, jnp.asarray(wt), padding=1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)

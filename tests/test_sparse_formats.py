@@ -5,8 +5,9 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip module on clean envs
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (bcsr_from_dense, bcsr_to_dense, csr_arrays_from_dense,
-                        ell_from_dense, ell_from_dense_conv, ell_to_dense,
+from repro.core import (balance_ell_conv, bcsr_from_dense, bcsr_to_dense,
+                        csr_arrays_from_dense, ell_from_dense,
+                        ell_from_dense_conv, ell_to_dense, inverse_permutation,
                         magnitude_prune, block_prune, stretch_offsets)
 from repro.core.sparse_format import bcsr_stack_from_dense
 
@@ -98,6 +99,61 @@ def test_magnitude_prune_achieves_sparsity(sparsity, seed):
     assert abs(achieved - sparsity) < 0.05
     # surviving entries are untouched
     np.testing.assert_array_equal(p[p != 0], w[p != 0])
+
+
+def _ell_conv_to_dense(ell):
+    """Scatter an EllConv (possibly row-permuted) back to (M, C, R, S)."""
+    m, c, r, s = ell.shape
+    out = np.zeros((m, c, r, s), np.float32)
+    rows = np.asarray(ell.perm) if ell.perm is not None else np.arange(m)
+    val = np.asarray(ell.value)
+    cid, rid, sid = (np.asarray(a) for a in (ell.cidx, ell.ridx, ell.sidx))
+    nnz = np.asarray(ell.nnz)
+    for i in range(m):
+        for j in range(nnz[i]):
+            out[rows[i], cid[i, j], rid[i, j], sid[i, j]] += val[i, j]
+    return out
+
+
+def test_balanced_bank_roundtrip():
+    """balance_ell_conv permutes whole rows only: scattering the balanced
+    bank through its perm reconstructs the exact original filter bank, rows
+    are sorted by descending nnz, and perm is a valid permutation."""
+    rng = np.random.default_rng(11)
+    w = _pruned(rng, (16, 4, 3, 3), 0.7)
+    ell = ell_from_dense_conv(w)
+    bal = balance_ell_conv(ell)
+    assert ell.perm is None and bal.perm is not None
+    perm = np.asarray(bal.perm)
+    assert sorted(perm.tolist()) == list(range(16))
+    nnz = np.asarray(bal.nnz)
+    assert (np.diff(nnz) <= 0).all()
+    np.testing.assert_array_equal(_ell_conv_to_dense(bal), w)
+    # inverse_permutation really inverts
+    inv = np.asarray(inverse_permutation(bal.perm))
+    np.testing.assert_array_equal(perm[inv], np.arange(16))
+    # per-row contents are untouched (row i of bal == row perm[i] of ell)
+    np.testing.assert_array_equal(np.asarray(bal.value),
+                                  np.asarray(ell.value)[perm])
+
+
+def test_balance_via_ell_from_dense_conv_flag():
+    rng = np.random.default_rng(13)
+    w = _pruned(rng, (8, 3, 3, 3), 0.6)
+    bal = ell_from_dense_conv(w, balance=True)
+    assert bal.perm is not None
+    np.testing.assert_array_equal(_ell_conv_to_dense(bal), w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.floats(0.0, 0.95), st.integers(0, 1000))
+def test_balanced_bank_roundtrip_property(m, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = _pruned(rng, (m, 3, 3, 3), sparsity)
+    bal = balance_ell_conv(ell_from_dense_conv(w))
+    np.testing.assert_array_equal(_ell_conv_to_dense(bal), w)
+    nnz = np.asarray(bal.nnz)
+    assert (np.diff(nnz) <= 0).all()
 
 
 def test_block_prune_keeps_dense_tiles():

@@ -28,8 +28,10 @@ def _geom(**kw):
 # ---------------------------------------------------------------------------
 
 def _assert_pallas_fits(g, cands):
-    """Every pallas candidate's (tm, te, tf) halo'd working set fits VMEM,
-    fused candidates accounting the residual input tile when present."""
+    """Every pallas candidate's (tm, te, tf) halo'd working set fits VMEM —
+    fused candidates accounting the residual input tile, pipelined ones the
+    second halo scratch buffer — and the three scalar-prefetch operands
+    (packed indices + nnz row + bias row) fit SMEM."""
     assert any(c.method == "pallas" for c in cands)
     for cd in cands:
         if cd.method != "pallas":
@@ -39,13 +41,16 @@ def _assert_pallas_fits(g, cands):
         k = g.k_est(cd.pad_to)
         x_bytes = (g.c * halo_extent(cd.te, g.stride, g.r)
                    * halo_extent(cd.tf, g.stride, g.s) * 4)
+        if cd.pipeline:
+            x_bytes *= 2
         out_bytes = cd.tm * cd.te * cd.tf * 4
         res_bytes = out_bytes if (cd.fuse and g.residual) else 0
         assert x_bytes + cd.tm * k * 4 + out_bytes + res_bytes <= VMEM_BUDGET
         assert tiling_fits(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
                            cd.tm, cd.te, cd.tf,
-                           fuse_res=cd.fuse and g.residual)
-        assert g.m * (k + 1) * 4 <= SMEM_BUDGET
+                           fuse_res=cd.fuse and g.residual,
+                           pipeline=cd.pipeline)
+        assert g.m * (k + 2) * 4 <= SMEM_BUDGET
 
 
 def test_candidates_tiles_divide_m_and_fit_budgets():
@@ -182,6 +187,75 @@ def test_plan_program_dedups_on_op_geometry():
 
 
 # ---------------------------------------------------------------------------
+# pipeline axis (double-buffered halo DMA) + permute axis (balanced banks)
+# ---------------------------------------------------------------------------
+
+def test_candidates_include_pipeline_and_permute_variants():
+    g = _geom()
+    cands = [c for c in enumerate_candidates(g) if c.method == "pallas"]
+    assert any(c.pipeline for c in cands)
+    assert any(not c.pipeline for c in cands)
+    assert any(c.permute for c in cands)
+    assert any(not c.permute for c in cands)
+    _assert_pallas_fits(g, cands)
+
+
+def test_pipelined_tilings_reserve_second_halo_buffer(monkeypatch):
+    """A tiling whose single halo block fits but whose doubled block busts
+    VMEM must be blocking-only in the candidate space."""
+    import repro.kernels.sparse_conv.ops as ops
+    args = dict(m=8, c=8, e=64, f=64, k=16, r=3, s=3, stride=1,
+                tm=8, te=64, tf=64)
+    x_bytes = 8 * 66 * 66 * 4
+    monkeypatch.setattr(ops, "_VMEM_BUDGET",
+                        x_bytes + 8 * 16 * 4 + 8 * 64 * 64 * 4)
+    assert tiling_fits(**args)
+    assert not tiling_fits(**args, pipeline=True)
+
+
+def test_roofline_credits_pipelined_staging():
+    """Double-buffered staging overlaps the halo copies with compute: on a
+    staging-heavy tiling the pipelined candidate must score no worse, and
+    its exposed staged-input stall must be strictly smaller."""
+    from repro.tuning import staging_stall_s
+
+    g = _geom()
+    base = dict(tm=8, pad_to=8, te=8, tf=8)
+    blocking = Candidate("pallas", **base)
+    pipelined = Candidate("pallas", **base, pipeline=True)
+    assert roofline_estimate(g, pipelined) <= roofline_estimate(g, blocking)
+    assert staging_stall_s(g, pipelined) < staging_stall_s(g, blocking)
+
+
+def test_roofline_charges_permute_gather_only():
+    """The kernel's per-row nnz loop makes tile compute permutation-
+    invariant (rows run sequentially on the TPU grid), so the roofline must
+    NOT fabricate a compute credit for balanced banks: the permute
+    candidate pays exactly its inverse-permutation gather and scores no
+    better analytically — any unrolled-loop scheduling benefit is wall-mode
+    territory."""
+    from repro.tuning import permute_bytes
+
+    g = _geom()
+    base = dict(tm=8, pad_to=8)
+    t_nat = roofline_estimate(g, Candidate("pallas", **base))
+    t_perm = roofline_estimate(g, Candidate("pallas", **base, permute=True))
+    assert permute_bytes(g, True) > permute_bytes(g, False) == 0.0
+    assert t_perm >= t_nat
+    # memory-bound geometry: the gather round-trip is visible
+    assert t_perm > t_nat
+
+
+def test_plan_entry_carries_pipeline_and_permute():
+    pe = PlanEntry(method="pallas", tm=8, te=8, tf=8, pad_to=8,
+                   pipeline=True, permute=True)
+    assert pe.candidate.pipeline and pe.candidate.permute
+    d = pe.to_dict()
+    assert d["pipeline"] is True and d["permute"] is True
+    assert PlanEntry.from_dict(d) == pe
+
+
+# ---------------------------------------------------------------------------
 # cache / planner round-trip
 # ---------------------------------------------------------------------------
 
@@ -220,9 +294,10 @@ def test_plan_cache_version_guard(tmp_path):
 
 
 def test_plan_cache_v1_migration(tmp_path):
-    """v1 documents (no te/tf, no fuse) load via migration: entries get
-    te=tf=None — the untiled schedule the v1 kernel ran — and fuse=False
-    (the unfused epilogue), and re-save as the current version."""
+    """v1 documents (no te/tf, no fuse, no pipeline/permute) load via
+    migration: entries get te=tf=None — the untiled schedule the v1 kernel
+    ran — fuse=False (the unfused epilogue) and pipeline=permute=False
+    (blocking DMA, natural row order), and re-save as the current version."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -235,23 +310,28 @@ def test_plan_cache_v1_migration(tmp_path):
     cache = PlanCache(str(path))
     pe = cache.get("k1")
     assert pe == PlanEntry(method="pallas", tm=64, pad_to=8, te=None, tf=None,
-                           fuse=False, est_s=1e-5, source="roofline")
+                           fuse=False, pipeline=False, permute=False,
+                           est_s=1e-5, source="roofline")
     assert pe.candidate.te is None and pe.candidate.tf is None
     assert pe.candidate.fuse is False
-    out = tmp_path / "v3.json"
+    assert pe.candidate.pipeline is False and pe.candidate.permute is False
+    out = tmp_path / "v4.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 3
+    assert doc["version"] == CACHE_VERSION == 4
     assert doc["entries"]["k1"]["te"] is None
     assert doc["entries"]["k1"]["fuse"] is False
+    assert doc["entries"]["k1"]["pipeline"] is False
+    assert doc["entries"]["k1"]["permute"] is False
     # and the migrated file round-trips as current-version
     assert PlanCache(str(out)).get("k1") == pe
 
 
 def test_plan_cache_v2_migration_roundtrip(tmp_path):
-    """v2 documents (te/tf but no fuse) load via migration — entries get
-    fuse=False, the unfused three-pass epilogue the v2 kernel always ran —
-    and the re-saved v3 file round-trips identically."""
+    """v2 documents (te/tf but no fuse/pipeline/permute) load via migration
+    — entries get fuse=False (the unfused three-pass epilogue) and
+    pipeline=permute=False (the v2 kernel's blocking single-buffer DMA) —
+    and the re-saved v4 file round-trips identically."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -267,15 +347,52 @@ def test_plan_cache_v2_migration_roundtrip(tmp_path):
     cache = PlanCache(str(path))
     pe = cache.get("kp")
     assert pe == PlanEntry(method="pallas", tm=32, te=16, tf=16, pad_to=4,
-                           fuse=False, est_s=2e-5, source="measured")
+                           fuse=False, pipeline=False, permute=False,
+                           est_s=2e-5, source="measured")
     assert cache.get("kd").fuse is False
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 3
+    assert doc["version"] == CACHE_VERSION == 4
     assert doc["entries"]["kp"]["fuse"] is False
+    assert doc["entries"]["kp"]["pipeline"] is False
     reloaded = PlanCache(str(out))
     assert reloaded.entries == cache.entries
+
+
+def test_plan_cache_v3_migration_roundtrip(tmp_path):
+    """v3 documents (fuse but no pipeline/permute) load via migration —
+    entries keep their fuse flag and get pipeline=permute=False, the
+    blocking natural-order schedule every v3 kernel ran — and the re-saved
+    v4 file round-trips identically."""
+    import json
+
+    from repro.tuning.cache import CACHE_VERSION
+
+    path = tmp_path / "v3.json"
+    path.write_text(json.dumps({
+        "version": 3,
+        "entries": {
+            "kf": {"method": "pallas", "tm": 16, "te": 32, "tf": 32,
+                   "pad_to": 8, "fuse": True, "est_s": 3e-5,
+                   "source": "measured"},
+            "kd": {"method": "csr-direct", "pad_to": 4, "est_s": 1e-4,
+                   "source": "roofline"},
+        }}))
+    cache = PlanCache(str(path))
+    pe = cache.get("kf")
+    assert pe == PlanEntry(method="pallas", tm=16, te=32, tf=32, pad_to=8,
+                           fuse=True, pipeline=False, permute=False,
+                           est_s=3e-5, source="measured")
+    assert cache.get("kd").pipeline is False
+    out = tmp_path / "migrated.json"
+    cache.save(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["version"] == CACHE_VERSION == 4
+    assert doc["entries"]["kf"]["fuse"] is True
+    assert doc["entries"]["kf"]["pipeline"] is False
+    assert doc["entries"]["kf"]["permute"] is False
+    assert PlanCache(str(out)).entries == cache.entries
 
 
 def test_wall_mode_measures_and_picks(tmp_path):
@@ -328,6 +445,41 @@ def test_auto_without_plan_self_tunes():
     params = cnn.init_cnn(net, 3, rng, 8)
     x = jnp.asarray(rng.standard_normal((1, 3, 8, 8)).astype(np.float32))
     y_auto = cnn.cnn_forward(net, params, x, method="auto")
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_executes_pipelined_permuted_plan():
+    """A plan entry pinning the full v4 schedule — pallas, fused epilogue,
+    double-buffered staging, nnz-balanced bank — must execute through
+    method="auto" and match the dense oracle (interpret mode)."""
+    net = [cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+           cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu()]
+    rng = np.random.default_rng(17)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    x = jnp.asarray(rng.standard_normal((1, 3, 10, 10)).astype(np.float32))
+    plan = {"c0": PlanEntry(method="dense"),
+            "c1": PlanEntry(method="pallas", tm=4, te=6, tf=6, pad_to=8,
+                            fuse=True, pipeline=True, permute=True)}
+    apply_plan_to_params(params, plan)
+    assert params["c1"]["ell_auto"].perm is not None  # balanced bank built
+    y_auto = cnn.cnn_forward(net, params, x, method="auto", plan=plan)
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_auto_balances_in_trace_without_apply_plan():
+    """The same permuted plan executed *without* apply_plan_to_params: the
+    engine must balance the natural-order bank in-trace (pure gathers)."""
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu()]
+    rng = np.random.default_rng(19)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    x = jnp.asarray(rng.standard_normal((1, 3, 10, 10)).astype(np.float32))
+    plan = {"c1": PlanEntry(method="pallas", tm=4, te=6, tf=6, pad_to=8,
+                            fuse=True, pipeline=True, permute=True)}
+    y_auto = cnn.cnn_forward(net, params, x, method="auto", plan=plan)
     y_dense = cnn.cnn_forward(net, params, x, method="dense")
     np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
                                rtol=1e-4, atol=1e-4)
