@@ -42,8 +42,8 @@ def render() -> None:
 
 def smoke() -> None:
     """Import every benchmark suite and spot-check the fig11 table rows, the
-    BENCH_sparse_conv.json schedule rows (pipeline axis), and the plan-cache
-    v1→v4 migrations."""
+    BENCH_sparse_conv.json schedule rows (pipeline axis + the bsr MXU
+    crossover), and the plan-cache v1→v5 migrations."""
     # Import errors in any figure module fail here, like benchmarks.run would.
     from benchmarks import (bench_sparse_conv, fig8_sparse_conv,  # noqa: F401
                             fig9_breakdown, fig10_locality, fig11_end2end,
@@ -67,12 +67,14 @@ def smoke() -> None:
     _smoke_bench_json(bench_sparse_conv)
     _smoke_cache_migrations()
     print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
-          "bench json pipeline rows, cache v1-v3 -> v4 migrations")
+          "bench json pipeline + bsr rows, cache v1-v4 -> v5 migrations")
 
 
 def _smoke_bench_json(bench_sparse_conv) -> None:
-    """BENCH_sparse_conv.json must carry both halo-DMA schedule rows and the
-    pipelined staged-input stalls must be strictly fewer (roofline)."""
+    """BENCH_sparse_conv.json must carry both halo-DMA schedule rows plus a
+    bsr (MXU) row, the pipelined staged-input stalls must be strictly fewer,
+    and at least one moderate-sparsity layer must cross over to the bsr
+    path under roofline auto-selection."""
     import tempfile
 
     with tempfile.TemporaryDirectory() as td:
@@ -87,12 +89,18 @@ def _smoke_bench_json(bench_sparse_conv) -> None:
             if "blocking" not in sch or "pipelined" not in sch:
                 raise SystemExit(
                     f"bench smoke: {rec['name']} missing a schedule row")
-        # check_stall_invariant already ran inside run(); assert it is wired
+            if "auto_roofline" not in rec:
+                raise SystemExit(
+                    f"bench smoke: {rec['name']} missing the auto row")
+        if not any("bsr" in rec["schedules"] for rec in layers):
+            raise SystemExit("bench smoke: no bsr (MXU) schedule rows")
+        # the invariants already ran inside run(); assert they are wired
         bench_sparse_conv.check_stall_invariant(doc)
+        bench_sparse_conv.check_mxu_crossover(doc)
 
 
 def _smoke_cache_migrations() -> None:
-    """Every migratable plan-cache schema (v1-v3) loads, defaults the fields
+    """Every migratable plan-cache schema (v1-v4) loads, defaults the fields
     its kernels predate, and re-persists as the current version."""
     import tempfile
 
@@ -103,6 +111,8 @@ def _smoke_cache_migrations() -> None:
         2: {"method": "pallas", "tm": 32, "te": 16, "tf": 16, "pad_to": 8},
         3: {"method": "pallas", "tm": 16, "te": 16, "tf": 16, "pad_to": 8,
             "fuse": True},
+        4: {"method": "pallas", "tm": 16, "te": 16, "tf": 16, "pad_to": 8,
+            "fuse": True, "pipeline": True, "permute": True},
     }
     if set(fixtures) != set(MIGRATABLE_VERSIONS):
         raise SystemExit("cache smoke: fixture set out of date with "
@@ -113,10 +123,14 @@ def _smoke_cache_migrations() -> None:
             p.write_text(json.dumps({"version": ver, "entries": {"k": entry}}))
             cache = PlanCache(str(p))
             pe = cache.get("k")
-            if pe.pipeline or pe.permute:
+            if ver < 4 and (pe.pipeline or pe.permute):
                 raise SystemExit(
                     f"cache smoke: v{ver} entry migrated with a non-blocking "
                     "schedule")
+            if pe.block_m is not None or pe.block_n is not None:
+                raise SystemExit(
+                    f"cache smoke: v{ver} entry migrated with a BCSR block "
+                    "shape no pre-v5 kernel ran")
             out = pathlib.Path(td) / f"v{ver}-migrated.json"
             cache.save(str(out))
             doc = json.loads(out.read_text())

@@ -1,8 +1,10 @@
 """Escoin core: sparse formats, pruning, and the paper's direct sparse conv."""
 from repro.core.types import DENSE, METHODS, SparsityConfig, escoin
-from repro.core.pruning import block_prune, magnitude_prune, measured_sparsity, prune
+from repro.core.pruning import (block_prune, block_prune_conv,
+                                magnitude_prune, measured_sparsity, prune)
 from repro.core.sparse_format import (
-    BcsrMatrix, EllConv, EllMatrix, balance_ell_conv, bcsr_from_dense,
+    BcsrConv, BcsrMatrix, EllConv, EllMatrix, balance_ell_conv,
+    bcsr_conv_from_dense, bcsr_conv_to_dense, bcsr_from_dense,
     bcsr_to_dense, csr_arrays_from_dense, ell_from_dense, ell_from_dense_conv,
     ell_to_dense, inverse_permutation, stretch_offsets)
 from repro.core.direct_conv import dense_conv, direct_sparse_conv, out_spatial
@@ -11,8 +13,10 @@ from repro.core.lowering import im2col, lowered_dense_conv, lowered_sparse_conv
 
 __all__ = [
     "DENSE", "METHODS", "SparsityConfig", "escoin",
-    "block_prune", "magnitude_prune", "measured_sparsity", "prune",
-    "BcsrMatrix", "EllConv", "EllMatrix", "balance_ell_conv",
+    "block_prune", "block_prune_conv", "magnitude_prune",
+    "measured_sparsity", "prune",
+    "BcsrConv", "BcsrMatrix", "EllConv", "EllMatrix", "balance_ell_conv",
+    "bcsr_conv_from_dense", "bcsr_conv_to_dense",
     "bcsr_from_dense", "bcsr_to_dense", "csr_arrays_from_dense",
     "ell_from_dense", "ell_from_dense_conv", "ell_to_dense",
     "inverse_permutation", "stretch_offsets",

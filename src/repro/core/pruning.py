@@ -52,12 +52,32 @@ def block_prune(w: jax.Array, sparsity: float, block: Tuple[int, int]) -> jax.Ar
     return wp[:m, :n]
 
 
+def block_prune_conv(w: jax.Array, sparsity: float,
+                     block: Tuple[int, int]) -> jax.Array:
+    """Prune an (M, C, R, S) filter bank at tile granularity.
+
+    The bank is scored over its flattened (M, C*R*S) weight matrix — the
+    layout :class:`~repro.core.sparse_format.BcsrConv` blocks — so every
+    surviving tile maps to one dense (bm, bn) MXU contraction in the BCSR
+    conv kernel.  Same tile L2-norm threshold rule as :func:`block_prune`.
+    """
+    if sparsity <= 0.0:
+        return w
+    if w.ndim != 4:
+        raise ValueError(
+            f"block_prune_conv expects 4-D filter banks, got shape {w.shape}")
+    m = w.shape[0]
+    return block_prune(w.reshape(m, -1), sparsity, block).reshape(w.shape)
+
+
 def prune(w: jax.Array, cfg: SparsityConfig) -> jax.Array:
     """Prune ``w`` according to ``cfg`` (dispatching on method/structure)."""
     if not cfg.enabled or cfg.sparsity <= 0.0:
         return w
     if cfg.method == "bcsr-mxu" and w.ndim == 2:
         return block_prune(w, cfg.sparsity, cfg.block)
+    if cfg.method == "bcsr-mxu" and w.ndim == 4:
+        return block_prune_conv(w, cfg.sparsity, cfg.block)
     return magnitude_prune(w, cfg.sparsity)
 
 

@@ -273,11 +273,14 @@ def bcsr_from_dense(w, block: Tuple[int, int] = (128, 128), pad_to: int = 1) -> 
 
     A tile is kept iff it contains any nonzero.  Rows are padded to a common
     tile count KB so shapes are static; padding tiles are all-zero data at
-    block-column 0 (inert).
+    block-column 0 (inert).  ``pad_to`` rounds KB up (and is clamped to
+    ``>= 1`` like the ELL converters), so an all-zero matrix still carries
+    one inert tile per block-row instead of a zero-width array.
     """
     w = np.asarray(w)
     m, n = w.shape
     bm, bn = block
+    pad_to = max(1, int(pad_to))
     pm, pn = (-m) % bm, (-n) % bn
     wp = np.pad(w, ((0, pm), (0, pn)))
     gm, gn = wp.shape[0] // bm, wp.shape[1] // bn
@@ -327,6 +330,84 @@ def bcsr_stack_from_dense(w3d, block: Tuple[int, int] = (128, 128)) -> BcsrMatri
         blocks=jnp.asarray(np.stack(blocks)), blockcol=jnp.asarray(np.stack(bcol)),
         nblocks=jnp.asarray(np.stack(nb)),
         shape=per_layer[0].shape, block=block)
+
+
+# ---------------------------------------------------------------------------
+# BCSR conv format (blocked filter banks for the MXU conv path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BcsrConv:
+    """Block-sparse conv weights for an (M, C, R, S) filter bank.
+
+    The bank is viewed as its flattened (M, C*R*S) weight matrix — the same
+    matrix ``core/lowering.py`` multiplies against im2col patches — and
+    blocked with the :class:`BcsrMatrix` tile/pad machinery: per block-row of
+    ``bm`` output channels, a padded list of kept (bm, bn) tiles over the
+    flattened input-patch axis.  Column ``j`` of a tile at block-column
+    ``bc`` covers the original weight entry ``(c, r, s)`` with
+    ``bc*bn + j = c*(R*S) + r*S + s``; columns past ``C*R*S`` (the format's
+    right-padding) carry zero weights and are inert.
+
+    blocks:   (gbm, KB, bm, bn) -- per block-row, KB padded dense tiles
+    blockcol: (gbm, KB) int32   -- block-column id of each tile (0 = padding)
+    nblocks:  (gbm,) int32      -- true tiles per block-row
+    shape:    original (M, C, R, S); block: (bm, bn)
+    """
+
+    blocks: jax.Array
+    blockcol: jax.Array
+    nblocks: jax.Array
+    shape: Tuple[int, int, int, int]
+    block: Tuple[int, int]
+
+    @property
+    def kb(self) -> int:
+        return int(self.blocks.shape[1])
+
+    @property
+    def gbm(self) -> int:
+        return int(self.blocks.shape[0])
+
+    def tree_flatten(self):
+        return (self.blocks, self.blockcol, self.nblocks), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, block = aux
+        return cls(*leaves, shape=shape, block=block)
+
+
+jax.tree_util.register_pytree_node(
+    BcsrConv, BcsrConv.tree_flatten, BcsrConv.tree_unflatten)
+
+
+def bcsr_conv_from_dense(w, block: Tuple[int, int] = (8, 128),
+                         pad_to: int = 1) -> BcsrConv:
+    """Convert a dense (M, C, R, S) filter bank to :class:`BcsrConv`.
+
+    Delegates to :func:`bcsr_from_dense` on the flattened (M, C*R*S) weight
+    matrix, so the tile-keep rule, KB padding and inert zero tiles are
+    exactly the linear-layer BCSR ones.  Weights pruned at tile granularity
+    (``core.pruning.block_prune_conv``) yield genuinely sparse block rows;
+    unstructured-pruned weights degrade gracefully to a dense blocked bank
+    (every tile kept) — slower, never wrong.
+    """
+    w = np.asarray(w)
+    if w.ndim != 4:
+        raise ValueError(f"bcsr_conv_from_dense expects 4-D, got {w.shape}")
+    m, c, r, s = w.shape
+    flat = bcsr_from_dense(w.reshape(m, c * r * s), block, pad_to=pad_to)
+    return BcsrConv(blocks=flat.blocks, blockcol=flat.blockcol,
+                    nblocks=flat.nblocks, shape=(m, c, r, s), block=block)
+
+
+def bcsr_conv_to_dense(b: BcsrConv) -> jax.Array:
+    """Inverse of ``bcsr_conv_from_dense`` (round-trip / parity oracle)."""
+    m, c, r, s = b.shape
+    flat = BcsrMatrix(blocks=b.blocks, blockcol=b.blockcol,
+                      nblocks=b.nblocks, shape=(m, c * r * s), block=b.block)
+    return bcsr_to_dense(flat).reshape(m, c, r, s)
 
 
 def csr_arrays_from_dense(w) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -25,13 +25,18 @@ import numpy as np
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.pruning import magnitude_prune
-from repro.core.sparse_format import (balance_ell_conv, ell_from_dense,
-                                      ell_from_dense_conv)
+from repro.core.sparse_format import (balance_ell_conv, bcsr_conv_from_dense,
+                                      ell_from_dense, ell_from_dense_conv)
 from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
                                   ReluOp, ResidualAddOp)
+from repro.kernels.bsr_conv.ops import bsr_conv
 from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
 
-METHODS = ("dense", "lowered", "csr-direct", "pallas", "auto")
+METHODS = ("dense", "lowered", "csr-direct", "pallas", "bsr", "auto")
+
+# Default BCSR tile shape for a direct ``method="bsr"`` call (no tuned plan
+# pinning one); the autotuner picks per layer from the block ladder.
+DEFAULT_BSR_BLOCK = (8, 128)
 
 
 def init_conv_params(program: Program, rng: np.random.Generator,
@@ -86,6 +91,13 @@ class CnnEngine:
     (nnz-balanced bank) flags are honored under ``method="auto"``; plain
     ``method="pallas"`` lets ``ops.sparse_conv`` auto-enable the pipeline
     whenever the second halo buffer fits VMEM.
+
+    ``method="bsr"`` runs the BCSR MXU conv kernel: a plan entry's
+    ``(block_m, block_n)`` picks the tile shape (``DEFAULT_BSR_BLOCK`` for
+    direct calls); banks not prebuilt by ``apply_plan_to_params`` are
+    blocked from the bound dense weights at trace time.  A stale plan entry
+    claiming ``bsr`` with no block shape (pre-v5 cache) falls back to the
+    dense executor.
     """
 
     def __init__(self, program: Program, params: Dict[str, Any],
@@ -122,7 +134,12 @@ class CnnEngine:
         plan = self._auto_plans.get(batch)
         if plan is None:
             from repro.tuning.planner import plan_program  # lazy: avoids cycle
-            plan = plan_program(self.program, batch=batch, mode="roofline")
+            # Pass the bound params: roofline mode then prices bsr
+            # candidates from each layer's *actual* kept-block structure
+            # (unstructured banks keep nearly every tile and must not be
+            # routed to the MXU path on the block-pruned estimate).
+            plan = plan_program(self.program, batch=batch, mode="roofline",
+                                params=self.params)
             self._auto_plans[batch] = plan
         return plan
 
@@ -134,6 +151,8 @@ class CnnEngine:
         tm = te = tf = None
         pipeline = None  # ops.sparse_conv auto-picks when the 2nd halo fits
         permute = False
+        block = None     # bsr: None = any prebuilt bank (or the default)
+        bcc = entry.get("bcsr_auto")
         fuse = True if fuse_override is None else fuse_override
         if method == "auto":
             pe = (plan or {}).get(op.name)
@@ -143,6 +162,13 @@ class CnnEngine:
                 pipeline, permute = pe.pipeline, pe.permute
                 if fuse_override is None:
                     fuse = pe.fuse
+                if method == "bsr":
+                    if pe.block_m is None or pe.block_n is None:
+                        # Stale plan predating the v5 schema: no block
+                        # shape to run — fall back to the dense executor.
+                        method = "dense"
+                    else:
+                        block = (pe.block_m, pe.block_n)
             ell = entry.get("ell_auto", entry.get("ell"))
             ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
             if (permute and method == "pallas" and ell is not None
@@ -153,6 +179,14 @@ class CnnEngine:
                 ell = balance_ell_conv(ell)
         else:
             ell, ell2d = entry.get("ell"), entry.get("ell2d")
+        if method == "bsr" and op.sparsity > 0 and (
+                bcc is None or (block is not None and bcc.block != block)):
+            # Plan block differs from the prebuilt bank (or
+            # apply_plan_to_params wasn't run): block the dense weights at
+            # trace time — ``entry["w"]`` is a concrete bound array, so the
+            # host-side conversion runs once per compile and is baked in.
+            bcc = bcsr_conv_from_dense(np.asarray(entry["w"]),
+                                       block=block or DEFAULT_BSR_BLOCK)
         b = entry["b"]
         if op.sparsity == 0 or method == "dense":
             y = dense_conv(x, entry["w"], stride=op.stride, padding=op.pad)
@@ -171,6 +205,15 @@ class CnnEngine:
             y = pallas_sparse_conv(x, ell, stride=op.stride, padding=op.pad,
                                    tm=tm, te=te, tf=tf, pipeline=pipeline,
                                    interpret=interp)
+        elif method == "bsr":
+            interp = jax.default_backend() != "tpu"
+            if fuse:
+                return bsr_conv(
+                    x, bcc, stride=op.stride, padding=op.pad, te=te, tf=tf,
+                    bias=b, fuse_relu=op.fuse_relu, residual=res,
+                    interpret=interp)
+            y = bsr_conv(x, bcc, stride=op.stride, padding=op.pad, te=te,
+                         tf=tf, interpret=interp)
         else:
             raise ValueError(method)
         # Unfused epilogue: the exact op sequence of the pre-engine executor.

@@ -3,6 +3,9 @@
 sparse_conv      -- the paper's direct sparse convolution (CSR + weight
                     stretching + dynamic indexing), TPU-adapted
 bsr_matmul       -- beyond-paper block-sparse matmul on the MXU
+bsr_conv         -- beyond-paper block-sparse (BCSR) direct convolution on
+                    the MXU: on-chip im2col patch gather + per-tile
+                    systolic contraction for moderately-sparse layers
 flash_attention  -- fused attention (fwd + custom-vjp bwd); removes the
                     T^2 logits HBM traffic the rooflines flagged
 """

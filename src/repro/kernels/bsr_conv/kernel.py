@@ -1,0 +1,218 @@
+"""Pallas TPU kernel: block-sparse (BCSR) direct convolution on the MXU.
+
+The ELL kernel (``kernels/sparse_conv``) issues one full-width VPU FMA per
+nonzero weight — the faithful TPU port of Escoin's per-nonzero GPU threads.
+That is the right shape for *very* sparse banks, but moderately-sparse,
+large-channel layers (GoogLeNet 1x1s, ResNet bottlenecks) burn VPU issue
+slots one scalar weight at a time while the 128x128 systolic array idles.
+This kernel trades a little pruning flexibility for dense-unit throughput
+(Park et al.'s direct sparse convolution refined with the Balanced-Sparsity
+insight of block-structured pruning): weights are pruned at (bm, bn) tile
+granularity over the flattened (M, C*R*S) weight matrix
+(``core/sparse_format.py:BcsrConv``), surviving tiles stay fully dense, and
+each one becomes a single MXU contraction against a gathered input-patch
+tile.
+
+Mechanics:
+
+  * grid = (N, ceil(E/TE), ceil(F/TF), gbm, KB) with KB innermost so the
+    (bm, TE, TF) f32 output block stays VMEM-resident and accumulates
+    across the kept weight tiles of its block-row (the ``bsr_matmul``
+    accumulation pattern, spatially tiled).
+  * the halo'd (C, halo_h, halo_w) input block for one spatial cell is
+    DMA'd HBM->VMEM once — at the cell's first (mt, kb) step — and reused
+    by every weight tile of every block-row of that cell (the ELL kernel's
+    staging discipline; overlapping halo blocks cannot be expressed with
+    blocked BlockSpecs, so the input stays in ``ANY`` and the kernel issues
+    an explicit sliced copy).
+  * per kept tile, the *gather* stage decodes each of the tile's bn flat
+    weight columns ``j = blockcol*bn + jl`` into ``(c, r, s)`` (two static
+    divmods — the same index arithmetic weight stretching trades bytes for)
+    and writes the strided (TE, TF) input window into row ``jl`` of a
+    (bn, TE, TF) VMEM patch buffer: an im2col patch tile, built on-chip
+    from the staged halo block instead of materialised in HBM (the
+    bandwidth waste the paper's direct method exists to remove).
+  * the *contract* stage is one ``dot_general`` of the (bm, bn) weight tile
+    against the (bn, TE, TF) patch tile with f32 accumulation — MXU work.
+    The gather is VPU work; the autotuner's roofline prices exactly this
+    gather-vs-systolic tradeoff (``tuning/measure.py:_bsr_terms``).
+  * rows shorter than KB mask the tail via ``pl.when`` on ``nblocks``;
+    block-columns past C*R*S (format right-padding) clamp their channel
+    decode — their weights are zero, so the clamped reads are inert.
+  * the fused epilogue (per-channel bias, optional residual, static ReLU)
+    runs on the resident f32 accumulator at the last KB step — one output
+    write, exactly like the ELL kernel's epilogue.
+
+Strides and edge tiles follow the ELL kernel: dynamic-start windows with a
+static ``[::stride]`` slice, ceiling-division spatial grids with masked
+out-of-range writes, and input zero-padding so every halo window stays in
+bounds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(blockcol_ref, nblocks_ref,   # scalar prefetch (SMEM)
+            x_ref,                       # HBM/ANY: halo-padded input
+            w_ref,                       # VMEM in: (1, 1, bm, bn)
+            b_ref,                       # VMEM in: (1, bm) f32 bias
+            *rest,                       # [res_ref,] out_ref, xblk, patch, sem
+            bm: int, bn: int, rs: int, s: int, c_in: int, stride: int,
+            te: int, tf: int, halo_h: int, halo_w: int,
+            fuse_relu: bool, has_res: bool):
+    if has_res:
+        res_ref, out_ref, xblk_ref, patch_ref, sem = rest
+    else:
+        res_ref = None
+        out_ref, xblk_ref, patch_ref, sem = rest
+    ni = pl.program_id(0)
+    et = pl.program_id(1)
+    ft = pl.program_id(2)
+    mt = pl.program_id(3)
+    kb = pl.program_id(4)
+    kb_n = pl.num_programs(4)
+
+    # Stage the halo'd input block once per (image, spatial tile); the
+    # (mt, kb) dims are innermost, so it persists for every weight tile of
+    # this cell (TPU grids run sequentially).
+    @pl.when(jnp.logical_and(mt == 0, kb == 0))
+    def _stage():
+        dma = pltpu.make_async_copy(
+            x_ref.at[ni, :, pl.ds(et * te * stride, halo_h),
+                     pl.ds(ft * tf * stride, halo_w)],
+            xblk_ref, sem)
+        dma.start()
+        dma.wait()
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Dynamic-start window extent for a static [::stride] landing exactly on
+    # the TE (resp. TF) output positions of this tile.
+    e_ext = (te - 1) * stride + 1
+    f_ext = (tf - 1) * stride + 1
+
+    @pl.when(kb < nblocks_ref[mt])
+    def _accum():
+        j0 = blockcol_ref[mt, kb] * bn
+        # Gather (VPU): build the (bn, TE, TF) im2col patch tile for this
+        # block column from the staged halo block, one decoded weight
+        # column per row.  jl is static (unrolled), j0 is a prefetched
+        # scalar.
+        for jl in range(bn):
+            j = j0 + jl
+            cj = j // rs
+            rem = j - cj * rs
+            r = rem // s
+            ss = rem - r * s
+            # Right-padding columns (j >= C*R*S) carry zero weights; clamp
+            # the channel so their gather stays in bounds (value is inert).
+            cj = jnp.minimum(cj, c_in - 1)
+            win = xblk_ref[cj, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
+            patch_ref[jl] = win[::stride, ::stride]
+        # Contract (MXU): one (bm, bn) x (bn, TE*TF) systolic pass, f32
+        # accumulate into the resident output block.
+        out_ref[0] += lax.dot_general(
+            w_ref[0, 0].astype(jnp.float32),
+            patch_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # Fused epilogue on the resident f32 accumulator at the last KB step:
+    # one output write instead of separate bias / residual / ReLU passes.
+    @pl.when(kb == kb_n - 1)
+    def _epilogue():
+        acc = out_ref[0] + b_ref[0][:, None, None]
+        if has_res:
+            acc = acc + res_ref[0].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        out_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rs", "s", "e", "f", "stride", "te", "tf",
+                     "fuse_relu", "interpret"))
+def bsr_conv_pallas(xpad: jax.Array, blocks: jax.Array, blockcol: jax.Array,
+                    nblocks: jax.Array, bias: jax.Array,
+                    residual: jax.Array | None = None, *, rs: int, s: int,
+                    e: int, f: int, stride: int = 1, te: int | None = None,
+                    tf: int | None = None, fuse_relu: bool = False,
+                    interpret: bool = False) -> jax.Array:
+    """Launch the BCSR MXU conv kernel.
+
+    Args:
+      xpad:     (N, C, Hp, Wp) pre-padded input (the paper's pad_in step).
+      blocks:   (gbm, KB, bm, bn) kept weight tiles (``BcsrConv.blocks``).
+      blockcol: (gbm, KB) int32 block-column ids over the flat C*R*S axis.
+      nblocks:  (gbm,) int32 true tiles per block-row.
+      bias:     (gbm, bm) f32 per-channel bias, blocked like the output
+                channels (pass zeros for a bias-free conv — bitwise no-op).
+      residual: optional (N, gbm*bm, E, F) shortcut accumulated before the
+                ReLU, channel-padded like the output.
+      rs, s:    R*S and S of the original filter bank (column decode).
+      e, f:     output spatial dims; stride applied in-kernel.
+      te, tf:   output spatial tile dims (default: whole output).  Need not
+                divide e/f — edge tiles use ceiling-division grids + masked
+                writes.
+      fuse_relu: clamp the accumulator in-kernel (the fused epilogue).
+
+    Returns: (N, gbm*bm, E, F) float32 — callers slice to the true M.
+    """
+    n, c, hp, wp = xpad.shape
+    gbm, kb_dim, bm, bn = blocks.shape
+    te = e if te is None else min(te, e)
+    tf = f if tf is None else min(tf, f)
+    r = rs // s
+    halo_h = (te - 1) * stride + r
+    halo_w = (tf - 1) * stride + s
+    et_n = pl.cdiv(e, te)
+    ft_n = pl.cdiv(f, tf)
+    # Zero-pad so the *last* tile's halo window stays in bounds; the extra
+    # rows/cols only ever feed output positions >= E/F, which Pallas drops.
+    need_h = (et_n * te - 1) * stride + r
+    need_w = (ft_n * tf - 1) * stride + s
+    if need_h > hp or need_w > wp:
+        xpad = jnp.pad(xpad, ((0, 0), (0, 0), (0, max(0, need_h - hp)),
+                              (0, max(0, need_w - wp))))
+    grid = (n, et_n, ft_n, gbm, kb_dim)
+    has_res = residual is not None
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((1, 1, bm, bn), lambda ni, et, ft, mt, kb, *_: (mt, kb, 0, 0)),
+        pl.BlockSpec((1, bm), lambda ni, et, ft, mt, kb, *_: (mt, 0)),
+    ]
+    inputs = [blockcol, nblocks, xpad, blocks, bias]
+    if has_res:
+        in_specs.append(pl.BlockSpec(
+            (1, bm, te, tf), lambda ni, et, ft, mt, kb, *_: (ni, mt, et, ft)))
+        inputs.append(residual)
+    return pl.pallas_call(
+        functools.partial(_kernel, bm=bm, bn=bn, rs=rs, s=s, c_in=c,
+                          stride=stride, te=te, tf=tf, halo_h=halo_h,
+                          halo_w=halo_w, fuse_relu=fuse_relu, has_res=has_res),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, bm, te, tf),
+                lambda ni, et, ft, mt, kb, *_: (ni, mt, et, ft)),
+            scratch_shapes=[
+                pltpu.VMEM((c, halo_h, halo_w), xpad.dtype),
+                pltpu.VMEM((bn, te, tf), xpad.dtype),
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, gbm * bm, e, f), jnp.float32),
+        interpret=interpret,
+    )(*inputs)

@@ -1,0 +1,141 @@
+"""Jit'd public wrapper around the BCSR MXU conv kernel.
+
+Handles: input padding (pad_in), output spatial tile selection (te, tf) with
+the halo'd-block VMEM feasibility model, channel padding (the format blocks
+M up to gbm*bm — bias and residual are padded in, the output sliced back),
+the dtype policy (bf16/f32 in, f32 accumulate, cast back on exit), the fused
+epilogue (bias / ReLU / bottleneck residual on the f32 accumulator,
+one output write), and the fallback to the dense-reconstruction conv — with
+the identical epilogue applied unfused — for geometries whose block table
+busts the SMEM budget or for which no VMEM-feasible spatial tiling exists.
+
+The block shape (bm, bn) is the format's, fixed at ``bcsr_conv_from_dense``
+time; the wrapper's tunable axes are the spatial tiles, which the
+``repro.tuning`` autotuner turns alongside the block-size candidates.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.direct_conv import out_spatial
+from repro.core.sparse_format import BcsrConv, bcsr_conv_to_dense
+from repro.kernels.bsr_conv.kernel import bsr_conv_pallas
+from repro.kernels.bsr_conv.ref import bsr_conv_ref
+from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
+                                           apply_epilogue, halo_extent,
+                                           spatial_candidates)
+
+# The candidate (bm, bn) block shapes the autotuner enumerates: bn pinned to
+# the 128-lane MXU width, bm laddered — bigger bm amortises the per-block
+# patch gather over more systolic rows (the gather-vs-compute tradeoff the
+# roofline prices), smaller bm wastes less on channel padding.
+BLOCK_CANDIDATES = ((8, 128), (16, 128), (32, 128), (64, 128))
+
+
+def bsr_smem_fits(gbm: int, kb: int) -> bool:
+    """Both scalar-prefetched operands fit SMEM: the int32 block-column
+    table (gbm*KB) and the int32 nblocks row (gbm)."""
+    return gbm * kb * 4 + gbm * 4 <= SMEM_BUDGET
+
+
+def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
+                    te: int, tf: int, itemsize: int = 4,
+                    fuse_res: bool = False) -> bool:
+    """Whether one (te, tf) spatial tiling's working set — halo'd input
+    block + (bm, bn) weight tile + (bn, te, tf) patch tile + f32 out tile
+    (+ the residual input tile when fused) — fits the VMEM budget."""
+    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * itemsize
+    w_bytes = bm * bn * itemsize
+    patch_bytes = bn * te * tf * itemsize
+    out_bytes = bm * te * tf * 4
+    res_bytes = out_bytes if fuse_res else 0
+    return x_bytes + w_bytes + patch_bytes + out_bytes + res_bytes <= VMEM_BUDGET
+
+
+def bsr_tile_candidates(c: int, e: int, f: int, r: int, s: int, stride: int,
+                        bm: int, bn: int, itemsize: int = 4,
+                        fuse_res: bool = False) -> List[Tuple[int, int]]:
+    """All (te, tf) spatial tilings whose VMEM working set fits, preferred
+    first: fewest spatial cells (least halo re-fetch and least per-cell
+    patch re-gather), then least total staged input traffic."""
+    out: List[Tuple[int, int]] = []
+    for te in spatial_candidates(e):
+        for tf in spatial_candidates(f):
+            if bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
+                               itemsize=itemsize, fuse_res=fuse_res):
+                out.append((te, tf))
+
+    def pref(cand: Tuple[int, int]) -> Tuple[int, int]:
+        te, tf = cand
+        cells = -(-e // te) * (-(-f // tf))
+        staged = cells * c * halo_extent(te, stride, r) * halo_extent(tf, stride, s)
+        return (cells, staged)
+
+    return sorted(out, key=pref)
+
+
+def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
+             padding: int = 0, te: Optional[int] = None,
+             tf: Optional[int] = None, bias: Optional[jax.Array] = None,
+             fuse_relu: bool = False, residual: Optional[jax.Array] = None,
+             interpret: bool = False) -> jax.Array:
+    """Block-sparse convolution + fused epilogue on the MXU.
+
+    (N, C, H, W) input, BCSR filter bank for (M, C, R, S) weights ->
+    (N, M, E, F) in x.dtype.  Any stride >= 1 runs in-kernel; te/tf default
+    to the preferred feasible spatial tiling and are the knobs the
+    ``repro.tuning`` autotuner turns (together with the format's block
+    shape).  Falls back to the dense-reconstruction conv — with the
+    identical epilogue applied unfused — when the block-column table busts
+    SMEM or no spatial tiling fits VMEM, so ``bsr_conv`` is a complete
+    conv+epilogue operator either way.
+    """
+    m, c, r, s = bc.shape
+    gbm, kb_dim, bm, bn = bc.blocks.shape
+    n, _, h, w = x.shape
+    e, f = out_spatial(h, w, r, s, stride, padding)
+    fuse_res = residual is not None
+    itemsize = jnp.dtype(x.dtype).itemsize
+
+    def fallback() -> jax.Array:
+        y = bsr_conv_ref(x, bcsr_conv_to_dense(bc), stride=stride,
+                         padding=padding).astype(x.dtype)
+        return apply_epilogue(y, bias, fuse_relu, residual)
+
+    if not bsr_smem_fits(gbm, kb_dim):
+        return fallback()
+    if te is not None and tf is not None:
+        # Fully-specified tiling (tuned plan / caller override): honor it
+        # when it fits, never launch an over-budget kernel.
+        te, tf = min(te, e), min(tf, f)
+        if not bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
+                               itemsize=itemsize, fuse_res=fuse_res):
+            return fallback()
+    else:
+        cands = bsr_tile_candidates(c, e, f, r, s, stride, bm, bn,
+                                    itemsize=itemsize, fuse_res=fuse_res)
+        if te is not None:
+            cands = [t for t in cands if t[0] == min(te, e)]
+        if tf is not None:
+            cands = [t for t in cands if t[1] == min(tf, f)]
+        if not cands:
+            return fallback()
+        te, tf = cands[0]
+    xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    # Channel padding: the kernel computes gbm*bm output channels; bias and
+    # residual are padded to match, the result sliced back to M.
+    mpad = gbm * bm
+    b = (jnp.zeros((m,), jnp.float32) if bias is None
+         else jnp.asarray(bias, jnp.float32))
+    b = jnp.pad(b, (0, mpad - m)).reshape(gbm, bm)
+    res = residual
+    if res is not None and mpad != m:
+        res = jnp.pad(res, ((0, 0), (0, mpad - m), (0, 0), (0, 0)))
+    out = bsr_conv_pallas(
+        xpad, bc.blocks, bc.blockcol, bc.nblocks, b, res,
+        rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
+        fuse_relu=fuse_relu, interpret=interpret)
+    return out[:, :m].astype(x.dtype)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the BCSR MXU conv kernel.
+
+Two references, two jobs:
+
+``bsr_conv_ref``          -- XLA's dense convolution over the dense
+                             reconstruction of the blocked bank: block
+                             sparsity is a performance transform, not a
+                             semantic one, so dense conv defines ground
+                             truth (the same contract as the ELL kernel's
+                             oracle).
+``bsr_conv_blocked_ref``  -- a structural mirror of the kernel's math for
+                             the *untiled* spatial schedule: the same
+                             per-block patch gather and (bm, bn) x
+                             (bn, E, F) f32 ``dot_general``, accumulated in
+                             the same KB order, with the same epilogue on
+                             the f32 accumulator.  Because interpret-mode
+                             Pallas executes the identical op sequence on
+                             identical operands, the kernel is *bit-
+                             identical* to this mirror — the parity grid's
+                             exactness anchor, next to the allclose checks
+                             against the dense oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.sparse_format import BcsrConv, bcsr_conv_to_dense
+
+
+def bsr_conv_ref(x: jax.Array, w_dense: jax.Array, *, stride: int = 1,
+                 padding: int = 0) -> jax.Array:
+    """(N, C, H, W) x (M, C, R, S) -> (N, M, E, F), float32 accumulate."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w_dense.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32)
+
+
+def bsr_conv_blocked_ref(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
+                         padding: int = 0,
+                         bias: Optional[jax.Array] = None,
+                         fuse_relu: bool = False,
+                         residual: Optional[jax.Array] = None) -> jax.Array:
+    """Mirror the kernel's untiled block contraction in pure jnp.
+
+    Host loops over the static block structure (block-column ids pulled to
+    numpy — this is an oracle, not a jit path); the per-block math is the
+    kernel's exact op sequence.  Returns (N, M, E, F) float32 in natural
+    channel order (the gbm*bm channel padding already sliced off).
+    """
+    n, c, h, w = x.shape
+    m, cw, r, s = bc.shape
+    rs = r * s
+    gbm, kb_dim, bm, bn = bc.blocks.shape
+    e = (h + 2 * padding - r) // stride + 1
+    f = (w + 2 * padding - s) // stride + 1
+    xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    e_ext = (e - 1) * stride + 1
+    f_ext = (f - 1) * stride + 1
+    blockcol = np.asarray(bc.blockcol)
+    nblocks = np.asarray(bc.nblocks)
+
+    def patch_tile(j0: int) -> jax.Array:
+        rows = []
+        for jl in range(bn):
+            j = j0 + jl
+            cj = min(j // rs, c - 1)   # inert right-padding columns clamp
+            rem = j - (j // rs) * rs
+            rr = rem // s
+            ss = rem - rr * s
+            win = xpad[:, cj, rr:rr + e_ext, ss:ss + f_ext]
+            rows.append(win[:, ::stride, ::stride])
+        return jnp.stack(rows, axis=1)   # (N, bn, E, F)
+
+    out_rows = []
+    for mt in range(gbm):
+        acc = jnp.zeros((n, bm, e, f), jnp.float32)
+        for kb in range(int(nblocks[mt])):
+            patch = patch_tile(int(blockcol[mt, kb]) * bn)
+            w_tile = bc.blocks[mt, kb].astype(jnp.float32)
+            acc = acc + jax.vmap(
+                lambda p, wt=w_tile: lax.dot_general(
+                    wt, p.astype(jnp.float32),
+                    dimension_numbers=(((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32))(patch)
+        if bias is not None:
+            b = jnp.asarray(bias, jnp.float32)
+            b = jnp.pad(b, (0, gbm * bm - b.shape[0]))
+            acc = acc + b[mt * bm:(mt + 1) * bm][None, :, None, None]
+        out_rows.append(acc)
+    out = jnp.concatenate(out_rows, axis=1)[:, :m]
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    if fuse_relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def bsr_conv_dense_oracle(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
+                          padding: int = 0) -> jax.Array:
+    """Dense-reconstruction conv of a blocked bank (convenience wrapper)."""
+    return bsr_conv_ref(x, bcsr_conv_to_dense(bc), stride=stride,
+                        padding=padding)

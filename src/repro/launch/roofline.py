@@ -18,7 +18,13 @@ import json
 import re
 from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12        # bf16 per chip
+PEAK_FLOPS = 197e12        # bf16 per chip (MXU systolic arrays)
+# VPU (8x128 vector unit) FMA throughput, as a coarse architectural ratio of
+# the MXU peak.  The per-nonzero FMA loops of the sparse direct/SpMM paths
+# issue on the VPU, not the systolic arrays — pricing them at PEAK_FLOPS
+# (the pre-BCSR model) hid the MXU-vs-VPU crossover that makes block
+# sparsity worthwhile at moderate densities.
+VPU_FLOPS = PEAK_FLOPS / 8
 HBM_BW = 819e9             # bytes/s per chip
 LINK_BW = 50e9             # bytes/s per ICI link
 

@@ -87,9 +87,10 @@ def autotune_main(args) -> None:
     cache = PlanCache(args.plan_cache)
     plan = plan_program(program, batch=1, mode=mode, cache=cache,
                         params=params)
-    fused = sum(pe.method == "pallas" and pe.fuse for pe in plan.values())
+    fused = sum(pe.method in ("pallas", "bsr") and pe.fuse
+                for pe in plan.values())
     print(f"tuned {name} @ {image}px: {program.summary()}; "
-          f"{len(plan)} conv layers ({fused} fused-epilogue pallas), "
+          f"{len(plan)} conv layers ({fused} fused-epilogue kernels), "
           f"{len(cache)} cache entries -> {args.plan_cache}")
     print(format_plan(plan))
 

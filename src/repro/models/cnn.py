@@ -9,11 +9,15 @@ selectable method (paper Table/Figs 8-11):
   "pallas"     -- Escoin direct sparse conv, Pallas kernel (interpret on CPU)
                   with the bias/ReLU/shortcut epilogue fused in-kernel and
                   the halo DMA double-buffered whenever it fits VMEM
+  "bsr"        -- block-sparse (BCSR) direct conv on the MXU: blocked
+                  weight tiles contracted against on-chip-gathered im2col
+                  patch tiles — dense-unit throughput for moderately-sparse
+                  layers (Pallas kernel, interpret on CPU)
   "auto"       -- per-layer dispatch through a tuned plan from repro.tuning
                   (the paper's kernel customization, measurement-driven);
                   plan entries carry the full schedule: method, (tm, te,
                   tf) tiling, pad_to, fused epilogue, pipelined staging,
-                  and nnz-balanced channel packing
+                  nnz-balanced channel packing, and the BCSR block shape
 
 Execution goes through the compile-once graph engine (``repro.engine``):
 the nested spec is lowered exactly once into a flat typed op program —

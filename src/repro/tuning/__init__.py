@@ -4,14 +4,17 @@ Per-layer method/tile selection, measurement-driven with an analytical
 roofline fallback, persisted to a JSON plan cache:
 
   space    -- candidate enumeration (method x (tm, te, tf) x pad_to x fuse
-              x pipeline x permute) from geometry; spatial tiles come from
-              the kernel's halo'd-block VMEM feasibility model (pipelined
-              tilings reserve the second halo buffer), the fuse axis from
-              the conv's lowered epilogue (bias/ReLU/shortcut in-kernel)
+              x pipeline x permute x BCSR (block_m, block_n)) from
+              geometry; spatial tiles come from the kernels' halo'd-block
+              VMEM feasibility models (pipelined tilings reserve the
+              second halo buffer), the fuse axis from the conv's lowered
+              epilogue (bias/ReLU/shortcut in-kernel)
   measure  -- wall-clock timing + roofline scoring of candidates (the
               roofline credits the fused epilogue's saved output passes,
               the pipelined schedule's overlapped staging bytes, and the
-              balanced bank's equalised channel tiles)
+              balanced bank's equalised channel tiles, and prices the MXU
+              systolic peak against the VPU FMA rate — the crossover that
+              sends moderately-sparse layers to the BCSR ``bsr`` method)
   cache    -- versioned JSON plan cache keyed on geometry/epilogue/sparsity/
               dtype/backend
   planner  -- plans the engine's lowered program (one ConvOp at a time)
@@ -25,12 +28,14 @@ from repro.tuning.measure import (epilogue_bytes, measurable,
 from repro.tuning.planner import (apply_plan_to_params, format_plan,
                                   geometry_for, geometry_of_op, plan_layer,
                                   plan_network, plan_program)
-from repro.tuning.space import (Candidate, ConvGeometry, enumerate_candidates,
-                                METHODS, PAD_TO_BUCKETS, pallas_feasible)
+from repro.tuning.space import (Candidate, ConvGeometry, bsr_feasible,
+                                enumerate_candidates, METHODS,
+                                PAD_TO_BUCKETS, pallas_feasible)
 
 __all__ = [
     "Candidate", "ConvGeometry", "METHODS", "PAD_TO_BUCKETS", "PlanCache",
-    "PlanEntry", "apply_plan_to_params", "enumerate_candidates",
+    "PlanEntry", "apply_plan_to_params", "bsr_feasible",
+    "enumerate_candidates",
     "epilogue_bytes", "format_plan", "geometry_for", "geometry_of_op",
     "layer_key", "measurable", "measure_candidate", "pallas_feasible",
     "permute_bytes", "plan_layer", "plan_network", "plan_program",

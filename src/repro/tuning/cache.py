@@ -9,24 +9,27 @@ models share one entry.
 
 Format (``docs/autotuning.md`` documents it for humans):
 
-    {"version": 4,
-     "entries": {"<key>": {"method": "pallas", "tm": 64, "te": 32, "tf": 32,
-                           "pad_to": 8, "fuse": true, "pipeline": true,
-                           "permute": false, "est_s": 1.2e-4,
-                           "source": "roofline"}}}
+    {"version": 5,
+     "entries": {"<key>": {"method": "bsr", "te": 32, "tf": 32,
+                           "block_m": 32, "block_n": 128, "fuse": true,
+                           "est_s": 1.2e-4, "source": "roofline"}}}
 
-Version history: v4 added the halo DMA schedule ``pipeline``
-(double-buffered staging: cell i+1's input block copies while cell i
-computes) and ``permute`` (nnz-balanced bank with the inverse permutation
-applied to the output) to pallas entries; v3 added the ``fuse`` flag
-(in-kernel epilogue: bias / ReLU / bottleneck shortcut applied to the f32
-accumulator); v2 added the output spatial tile ``(te, tf)``.  Older
+Version history: v5 added the ``bsr`` method (BCSR MXU conv) and its
+``block_m``/``block_n`` tile shape; v4 added the halo DMA schedule
+``pipeline`` (double-buffered staging: cell i+1's input block copies while
+cell i computes) and ``permute`` (nnz-balanced bank with the inverse
+permutation applied to the output) to pallas entries; v3 added the ``fuse``
+flag (in-kernel epilogue: bias / ReLU / bottleneck shortcut applied to the
+f32 accumulator); v2 added the output spatial tile ``(te, tf)``.  Older
 documents load via migration — v1 entries get ``te = tf = None`` (the
 untiled schedule the v1 kernel executed), v1/v2 entries get ``fuse =
-False`` (those kernels always ran the unfused three-pass epilogue), and
-v1-v3 entries get ``pipeline = permute = False`` (those kernels always
-staged with a blocking single-buffer DMA over natural-order banks) — and
-are re-persisted as v4 on the next save.
+False`` (those kernels always ran the unfused three-pass epilogue), v1-v3
+entries get ``pipeline = permute = False`` (those kernels always staged
+with a blocking single-buffer DMA over natural-order banks), and v1-v4
+entries get ``block_m = block_n = None`` (no pre-v5 kernel ran blocked) —
+and are re-persisted as v5 on the next save.  A (corrupt or hand-edited)
+pre-v5 entry claiming ``method="bsr"`` therefore migrates with no block
+shape; executors treat that as a stale plan and fall back to dense.
 """
 from __future__ import annotations
 
@@ -37,9 +40,9 @@ from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
 
-CACHE_VERSION = 4
+CACHE_VERSION = 5
 # Older schema versions load() can migrate in-memory (see module docstring).
-MIGRATABLE_VERSIONS = (1, 2, 3)
+MIGRATABLE_VERSIONS = (1, 2, 3, 4)
 
 # Sparsity bucket width for cache keys: layers within 5% density share plans.
 SPARSITY_BUCKET = 0.05
@@ -54,9 +57,11 @@ class PlanEntry:
     pad_to: Optional[int] = None
     te: Optional[int] = None      # output spatial tile (None: untiled)
     tf: Optional[int] = None
-    fuse: bool = False            # pallas: in-kernel epilogue
+    fuse: bool = False            # pallas/bsr: in-kernel epilogue
     pipeline: bool = False        # pallas: double-buffered halo DMA
     permute: bool = False         # pallas: nnz-balanced bank
+    block_m: Optional[int] = None  # bsr: BCSR tile shape
+    block_n: Optional[int] = None
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
 
@@ -64,12 +69,14 @@ class PlanEntry:
     def candidate(self) -> Candidate:
         return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to,
                          te=self.te, tf=self.tf, fuse=self.fuse,
-                         pipeline=self.pipeline, permute=self.permute)
+                         pipeline=self.pipeline, permute=self.permute,
+                         block_m=self.block_m, block_n=self.block_n)
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
                 "te": self.te, "tf": self.tf, "fuse": self.fuse,
                 "pipeline": self.pipeline, "permute": self.permute,
+                "block_m": self.block_m, "block_n": self.block_n,
                 "est_s": self.est_s, "source": self.source}
 
     @classmethod
@@ -77,12 +84,15 @@ class PlanEntry:
         # Migration: absent te/tf means the untiled schedule (v1), absent
         # fuse the unfused three-pass epilogue (v1/v2), absent
         # pipeline/permute the blocking single-buffer DMA over a
-        # natural-order bank (v1-v3) — each the schedule those kernels ran.
+        # natural-order bank (v1-v3), absent block_m/block_n no BCSR tile
+        # shape (v1-v4; executors fall back if such an entry claims
+        # method="bsr") — each the schedule those kernels ran.
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
                    te=d.get("te"), tf=d.get("tf"),
                    fuse=bool(d.get("fuse", False)),
                    pipeline=bool(d.get("pipeline", False)),
                    permute=bool(d.get("permute", False)),
+                   block_m=d.get("block_m"), block_n=d.get("block_n"),
                    est_s=float(d.get("est_s", 0.0)),
                    source=d.get("source", "heuristic"))
 
@@ -129,10 +139,11 @@ class PlanCache:
                 f"plan cache {path} has version {version!r}, "
                 f"expected {CACHE_VERSION} (or migratable "
                 f"{MIGRATABLE_VERSIONS})")
-        # v1-v3 migration happens in from_dict: absent te/tf default to None
+        # v1-v4 migration happens in from_dict: absent te/tf default to None
         # (the untiled schedule), absent fuse to False (the unfused
-        # epilogue), and absent pipeline/permute to False (blocking DMA,
-        # natural row order).  save() re-persists as the current version.
+        # epilogue), absent pipeline/permute to False (blocking DMA,
+        # natural row order), and absent block_m/block_n to None (no BCSR
+        # shape).  save() re-persists as the current version.
         self.entries = {k: PlanEntry.from_dict(v)
                         for k, v in doc.get("entries", {}).items()}
         return self

@@ -4,9 +4,10 @@ Two scoring modes, both returning seconds (lower is better):
 
   ``mode="wall"``     -- jit + warmup + median-of-k wall time (the canonical
                          timer; ``benchmarks/common.py`` re-exports it).  The
-                         Pallas kernel is only wall-timed on a real TPU
-                         backend — in interpret mode its Python-executed time
-                         is meaningless, so it is excluded from measurement.
+                         Pallas kernels (ELL ``pallas`` and BCSR ``bsr``) are
+                         only wall-timed on a real TPU backend — in interpret
+                         mode their Python-executed time is meaningless, so
+                         they are excluded from measurement.
   ``mode="roofline"`` -- analytic max(compute, memory) bound reusing the
                          constants of ``launch/roofline.py``.  Used in CI /
                          interpret mode and whenever measurement is disabled;
@@ -23,11 +24,12 @@ import numpy as np
 
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
-from repro.core.sparse_format import (balance_ell_conv, ell_from_dense,
-                                      ell_from_dense_conv)
+from repro.core.sparse_format import (balance_ell_conv, bcsr_conv_from_dense,
+                                      ell_from_dense, ell_from_dense_conv)
+from repro.kernels.bsr_conv.ops import bsr_conv
 from repro.kernels.sparse_conv.ops import (apply_epilogue, halo_extent,
                                            sparse_conv)
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS, VPU_FLOPS
 from repro.tuning.space import Candidate, ConvGeometry
 
 
@@ -101,8 +103,11 @@ def _pallas_terms(g: ConvGeometry, cand: Candidate):
     Compute: the kernel's per-row loop is bounded by that row's true nnz
     and the TM-tile's rows execute sequentially on the TPU's single
     sequential grid, so tile compute is the *sum* of row nnz — invariant
-    under row permutation.  The analytic bound is therefore the true flop
-    count for balanced and natural-order banks alike; ``permute`` only
+    under row permutation — priced at the VPU FMA rate (the per-nonzero
+    broadcast-FMA loop issues on the vector unit; the systolic arrays are
+    the bsr path's territory, :func:`_bsr_terms`).  The analytic bound is
+    therefore the true flop count for balanced and natural-order banks
+    alike; ``permute`` only
     shows up on the memory side (the inverse-permutation gather,
     :func:`permute_bytes`).  Any scheduling benefit of near-equal rows per
     unrolled tile (the GPU-side balancing win of Yao et al.,
@@ -120,8 +125,67 @@ def _pallas_terms(g: ConvGeometry, cand: Candidate):
     ell_bytes = float(m * k_pad * (itemsize + 4))
     other = (dout + ell_bytes + epilogue_bytes(g, fused=cand.fuse)
              + permute_bytes(g, cand.permute))
-    return (fl / PEAK_FLOPS, staged_input_bytes(g, cand) / HBM_BW,
+    return (fl / VPU_FLOPS, staged_input_bytes(g, cand) / HBM_BW,
             other / HBM_BW)
+
+
+def bcsr_true_kept(w_dense: np.ndarray, bm: int, bn: int) -> float:
+    """Mean kept (any-nonzero) tiles per block-row of the *actual* bank a
+    (bm, bn)-blocked ``bcsr_conv_from_dense`` would build from ``w_dense``.
+
+    The geometry-only estimate (``ConvGeometry.bsr_grid``) assumes
+    block-structured pruning; on unstructured magnitude-pruned weights
+    nearly every tile contains a nonzero, so the real bank is far denser.
+    When the planner has the weights in hand it recosts bsr candidates
+    with this true count instead of the estimate.
+    """
+    w = np.asarray(w_dense)
+    m = w.shape[0]
+    flat = w.reshape(m, -1)
+    n2 = flat.shape[1]
+    pm, pn = (-m) % bm, (-n2) % bn
+    wp = np.pad(flat, ((0, pm), (0, pn)))
+    gbm, gbn = wp.shape[0] // bm, wp.shape[1] // bn
+    tiles = wp.reshape(gbm, bm, gbn, bn).transpose(0, 2, 1, 3)
+    keep = (tiles != 0).any(axis=(2, 3))
+    return max(1.0, float(keep.sum(axis=1).mean()))
+
+
+def _bsr_terms(g: ConvGeometry, cand: Candidate,
+               kept_override: Optional[float] = None):
+    """(compute_s, staged_s, other_mem_s) for one bsr (BCSR MXU) candidate.
+
+    Compute has two serialized stages per kept weight tile: the *gather*
+    (VPU — bn strided windows of te*tf elements copied from the staged halo
+    block into the patch tile) and the *contraction* (MXU — one
+    (bm, bn) x (bn, te*tf) systolic pass at the dense-unit peak).  Bigger
+    bm amortises the gather over more systolic rows; that ratio is the
+    tile-gather-vs-systolic-compute tradeoff this model prices against the
+    ELL kernel's pure-VPU FMA loop (:func:`_pallas_terms`).  Kept-block
+    counts assume block-structured pruning at the layer's sparsity
+    (``ConvGeometry.bsr_grid``) unless ``kept_override`` supplies the
+    actual bank's mean kept-per-row (:func:`bcsr_true_kept` — what the
+    planner passes when it has the layer's weights).  Memory: the same
+    halo staging model as the ELL kernel (blocking DMA), plus the kept
+    weight tiles, the f32 output, and the epilogue traffic.
+    """
+    bm, bn = cand.block_m or 8, cand.block_n or 128
+    gbm, _, kept = g.bsr_grid(bm, bn)
+    if kept_override is not None:
+        kept = kept_override
+    n = g.batch
+    e, f = g.e, g.f
+    itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    te = min(cand.te or e, e)
+    tf = min(cand.tf or f, f)
+    cells = ((e + te - 1) // te) * ((f + tf - 1) // tf)
+    mxu_fl = 2.0 * n * gbm * kept * bm * bn * e * f
+    gather_elems = float(n * cells * gbm * kept * bn * te * tf)
+    compute_s = mxu_fl / PEAK_FLOPS + gather_elems / VPU_FLOPS
+    dout = float(n * gbm * bm * e * f * 4)
+    w_bytes = float(gbm * kept * bm * bn * itemsize)
+    other = dout + w_bytes + epilogue_bytes(g, fused=cand.fuse)
+    return (compute_s, staged_input_bytes(g, cand) / HBM_BW, other / HBM_BW)
 
 
 def staging_stall_s(g: ConvGeometry, cand: Candidate) -> float:
@@ -138,23 +202,44 @@ def staging_stall_s(g: ConvGeometry, cand: Candidate) -> float:
     still cross the shared HBM bus, which :func:`roofline_estimate` keeps
     in the memory term for both schedules.
     """
-    t_fl, t_stage, _ = _pallas_terms(g, cand)
+    terms = (_bsr_terms if cand.method == "bsr" else _pallas_terms)(g, cand)
+    t_fl, t_stage, _ = terms
     if not cand.pipeline:
         return t_stage
     return max(0.0, t_stage - t_fl)
 
 
-def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
+def roofline_estimate(g: ConvGeometry, cand: Candidate,
+                      w_dense: Optional[np.ndarray] = None,
+                      bsr_kept: Optional[float] = None) -> float:
     """max(compute, memory) time bound for one candidate, in seconds.
 
-    Mirrors the per-method byte/flop accounting of fig8's TPU projection:
+    ``w_dense`` (optional) supplies the layer's actual pruned weights; it
+    only affects bsr candidates, whose kept-block counts are then measured
+    from the real bank (:func:`bcsr_true_kept`) instead of assuming
+    block-structured pruning at the nominal sparsity.  ``bsr_kept``
+    short-circuits that scan with a precomputed mean kept-per-row (the
+    planner computes it once per block shape, not once per candidate).
 
-      dense       streams input + output + dense weights; full dense flops.
+    Mirrors the per-method byte/flop accounting of fig8's TPU projection,
+    refined with the execution-unit split: dense conv and the bsr path
+    contract on the MXU (``PEAK_FLOPS``), while the per-nonzero FMA loops
+    of lowered / csr-direct / pallas issue on the VPU (``VPU_FLOPS``) —
+    the crossover that makes block sparsity worthwhile at moderate
+    densities, and the reason moderately-sparse large-channel layers used
+    to be stuck below the dense roofline:
+
+      dense       streams input + output + dense weights; full dense flops
+                  at the MXU peak.
       lowered     materialises the duplicated im2col matrix twice (write +
                   read) — the bandwidth waste the paper's direct method
-                  removes; sparse flops over the padded ELL rows.
+                  removes; sparse VPU flops over the padded ELL rows.
       csr-direct  streams input + output + ELL (value, packed idx); the scan
-                  covers all K padded slots, so padded K costs flops.
+                  covers all K padded slots, so padded K costs (VPU) flops.
+      bsr         the BCSR MXU path: same halo staging model as pallas
+                  (blocking DMA), kept weight tiles streamed, compute =
+                  serialized VPU patch gather + MXU tile contractions
+                  (:func:`_bsr_terms` — the gather-vs-systolic tradeoff).
       pallas      same traffic, but the halo'd input block is staged
                   HBM->VMEM once per (image, spatial-tile) grid cell and
                   reused across channel tiles: smaller (te, tf) tiles cost
@@ -193,15 +278,28 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate) -> float:
     if cand.method == "dense":
         return max(dense_fl / PEAK_FLOPS,
                    (din + dout + itemsize * m * c * rs + ep_unfused) / HBM_BW)
+    if cand.method == "bsr":
+        # Blocking halo DMA (like un-pipelined pallas): the unit stalls for
+        # every cell's staged copy, so staging serialises with the rest.
+        # With the layer's weights in hand, kept-block counts come from the
+        # *actual* bank — unstructured magnitude-pruned weights keep nearly
+        # every tile, and pricing them with the block-structured estimate
+        # would route such layers to a slower-than-dense schedule.
+        kept = bsr_kept
+        if kept is None and w_dense is not None:
+            kept = bcsr_true_kept(w_dense, cand.block_m or 8,
+                                  cand.block_n or 128)
+        t_c, t_stage, t_other = _bsr_terms(g, cand, kept_override=kept)
+        return t_stage + max(t_c, t_other)
     k_pad = g.k_est(cand.pad_to or 8)
     ell_bytes = float(m * k_pad * (itemsize + 4))  # value + packed index
     padded_fl = 2.0 * n * m * k_pad * e * f
     if cand.method == "lowered":
         im2col = float(n * c * rs * e * f * itemsize)
-        return max(padded_fl / PEAK_FLOPS,
+        return max(padded_fl / VPU_FLOPS,
                    (2 * im2col + dout + ell_bytes + ep_unfused) / HBM_BW)
     if cand.method == "csr-direct":
-        return max(padded_fl / PEAK_FLOPS,
+        return max(padded_fl / VPU_FLOPS,
                    (din + dout + ell_bytes + ep_unfused) / HBM_BW)
     if cand.method == "pallas":
         t_fl, t_stage, t_other = _pallas_terms(g, cand)
@@ -247,6 +345,20 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
         fn = jax.jit(lambda x, e2d=ell2d: epilogue(lowered_sparse_conv(
             x, e2d, r=g.r, s=g.s, stride=g.stride, padding=g.pad)))
         return fn, ()
+    if cand.method == "bsr":
+        # The BCSR bank is built from the pruned weights *as given* — on
+        # unstructured-pruned banks most tiles survive, and that denser
+        # reality is exactly what the wall clock should see.
+        bcc = bcsr_conv_from_dense(
+            w_dense, block=(cand.block_m or 8, cand.block_n or 128))
+        if cand.fuse:
+            return jax.jit(lambda x, b=bcc: bsr_conv(
+                x, b, stride=g.stride, padding=g.pad, te=cand.te, tf=cand.tf,
+                bias=bias, fuse_relu=g.relu, residual=res,
+                interpret=interpret)), ()
+        return jax.jit(lambda x, b=bcc: epilogue(bsr_conv(
+            x, b, stride=g.stride, padding=g.pad, te=cand.te, tf=cand.tf,
+            interpret=interpret))), ()
     ell = ell_from_dense_conv(w_dense, pad_to=pad_to)
     if cand.method == "csr-direct":
         fn = jax.jit(lambda x, e=ell: epilogue(direct_sparse_conv(
@@ -288,8 +400,9 @@ def measure_candidate(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
 def measurable(cand: Candidate, backend: Optional[str] = None) -> bool:
     """Whether wall-timing this candidate is meaningful on this backend.
 
-    Pallas in interpret mode is Python-executed — its wall time says nothing
-    about the kernel, so off-TPU it is scored by roofline only.
+    Pallas kernels (the ELL ``pallas`` path and the BCSR ``bsr`` path) in
+    interpret mode are Python-executed — their wall time says nothing about
+    the kernel, so off-TPU they are scored by roofline only.
     """
     backend = backend or jax.default_backend()
-    return cand.method != "pallas" or backend == "tpu"
+    return cand.method not in ("pallas", "bsr") or backend == "tpu"

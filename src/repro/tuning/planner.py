@@ -22,11 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
+from repro.core.sparse_format import (bcsr_conv_from_dense, ell_from_dense,
+                                      ell_from_dense_conv)
 from repro.engine import ConvOp, Program, lower, spec
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key
-from repro.tuning.measure import (measurable, measure_candidate,
-                                  roofline_estimate)
+from repro.tuning.measure import (bcsr_true_kept, measurable,
+                                  measure_candidate, roofline_estimate)
 from repro.tuning.space import ConvGeometry, enumerate_candidates
 
 
@@ -59,7 +60,12 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
 
     ``interpret=None`` resolves per backend: compiled on TPU, interpret
     elsewhere — wall-timing an interpret-mode Pallas kernel would measure
-    the Python interpreter, not the kernel.
+    the Python interpreter, not the kernel.  ``w_dense`` is required for
+    wall mode and *used* by roofline mode when given: bsr candidates are
+    then priced from the actual bank's kept-block structure instead of
+    the block-structured-pruning estimate (unstructured magnitude-pruned
+    weights keep nearly every tile — the estimate would send such layers
+    to a slower-than-dense MXU schedule).
     """
     if interpret is None:
         interpret = backend != "tpu"
@@ -76,10 +82,18 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
             raise ValueError("wall-mode tuning needs the layer's dense weights")
         x = jnp.asarray(rng.standard_normal(
             (g.batch, g.c, g.h, g.w)).astype(np.float32))
+    kept_by_block: Dict[Any, float] = {}
     for cd in cands:
         if mode == "wall":
             t = measure_candidate(g, cd, w_dense, x, warmup=warmup,
                                   iters=iters, interpret=interpret)
+        elif cd.method == "bsr" and w_dense is not None:
+            # One bank scan per block shape, not per candidate — the
+            # ladder has ~4 shapes but ~dozens of (te, tf, fuse) points.
+            blk = (cd.block_m or 8, cd.block_n or 128)
+            if blk not in kept_by_block:
+                kept_by_block[blk] = bcsr_true_kept(w_dense, *blk)
+            t = roofline_estimate(g, cd, bsr_kept=kept_by_block[blk])
         else:
             t = roofline_estimate(g, cd)
         if t < best_t:
@@ -87,8 +101,27 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
     return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
                      te=best.te, tf=best.tf, fuse=best.fuse,
                      pipeline=best.pipeline, permute=best.permute,
+                     block_m=best.block_m, block_n=best.block_n,
                      est_s=best_t,
                      source="measured" if mode == "wall" else "roofline")
+
+
+def weight_structure_tag(w_dense: np.ndarray) -> str:
+    """Cache-key component for weights-aware plans: the bank's kept-tile
+    fraction at the default (8, 128) block, bucketed to 10%.
+
+    Weights-aware roofline scores depend on the bank's *block structure*
+    (a magnitude-pruned and a block-pruned bank of identical geometry and
+    sparsity price bsr very differently), so plans scored with weights in
+    hand must not share a cache entry across structures — without this
+    tag, a block-pruned model's ``bsr`` plan could be inherited by an
+    unstructured bank of the same shape, the exact mis-routing the
+    weights-aware costing exists to prevent.
+    """
+    w = np.asarray(w_dense)
+    gbn = max(1, -(-(int(np.prod(w.shape[1:]))) // 128))
+    frac = bcsr_true_kept(w, 8, 128) / gbn
+    return f"bk{min(1.0, round(frac, 1))}"
 
 
 def plan_program(program: Program, *, batch: int = 1,
@@ -104,9 +137,11 @@ def plan_program(program: Program, *, batch: int = 1,
     Cache hits skip scoring entirely; misses are scored and written back (and
     persisted to ``cache.path`` if set).  Duplicate geometries — same layer
     key, which includes the fused-epilogue signature — are scored once per
-    run even with no cache supplied.  ``mode="roofline"`` needs no weights;
-    ``mode="wall"`` measures on the pruned weights in ``params`` (as built
-    by ``cnn.init_cnn`` / ``engine.init_conv_params``).
+    run even with no cache supplied.  ``mode="roofline"`` needs no weights
+    but *uses* ``params`` when supplied (bsr candidates are priced from
+    each layer's actual kept-block structure); ``mode="wall"`` requires
+    them and measures on the pruned weights (as built by ``cnn.init_cnn``
+    / ``engine.init_conv_params``).
     """
     if mode not in ("roofline", "wall"):
         raise ValueError(f"unknown tuning mode {mode!r}")
@@ -116,8 +151,26 @@ def plan_program(program: Program, *, batch: int = 1,
     misses = 0
     for op in program.conv_ops:
         g = geometry_of_op(op, batch=batch, dtype=dtype)
-        key = layer_key(g, backend)
+        w_dense = None
+        if op.sparsity > 0 and params is not None and op.name in params:
+            w_dense = np.asarray(params[op.name]["w"])
+        base_key = key = layer_key(g, backend)
+        if w_dense is not None:
+            # Weights-aware scores depend on the bank's block structure,
+            # which the geometry key cannot see: extend the key so e.g. a
+            # block-pruned model's bsr plan is never inherited by an
+            # unstructured bank of identical geometry.
+            key += "_" + weight_structure_tag(w_dense)
         entry = cache.get(key) if cache is not None else None
+        if entry is None and cache is not None and key != base_key:
+            # Legacy compatibility: pre-tag caches (v1-v4 migrations, or
+            # weight-free v5 runs) keyed without the structure tag.  Only
+            # bsr pricing is structure-sensitive, so a non-bsr legacy
+            # winner is safe to inherit; a legacy bsr entry is not — it
+            # may have been priced for a different bank structure.
+            legacy = cache.get(base_key)
+            if legacy is not None and legacy.method != "bsr":
+                entry = legacy
         if entry is None:
             entry = scored.get(key)
         if entry is None:
@@ -125,12 +178,9 @@ def plan_program(program: Program, *, batch: int = 1,
                 # Dense-kept layer: one candidate, nothing to measure.
                 entry = PlanEntry(method="dense", source="heuristic")
             else:
-                w_dense = None
-                if mode == "wall":
-                    if params is None or op.name not in params:
-                        raise ValueError(
-                            f"wall-mode tuning needs params for {op.name}")
-                    w_dense = np.asarray(params[op.name]["w"])
+                if mode == "wall" and w_dense is None:
+                    raise ValueError(
+                        f"wall-mode tuning needs params for {op.name}")
                 entry = plan_layer(g, mode=mode, w_dense=w_dense,
                                    backend=backend, interpret=interpret,
                                    warmup=warmup, iters=iters)
@@ -153,12 +203,15 @@ def plan_network(net: Sequence[Any], in_c: int, image: int, *, batch: int = 1,
 
 def apply_plan_to_params(params: Dict[str, Any],
                          plan: Dict[str, PlanEntry]) -> Dict[str, Any]:
-    """Rebuild per-layer sparse formats at each plan's tuned ``pad_to``.
+    """Rebuild per-layer sparse formats at each plan's tuned knobs.
 
-    Stores them under ``ell_auto`` / ``ell2d_auto`` next to the defaults, so
-    non-auto methods keep working unchanged.  A pallas entry with
-    ``permute=True`` gets its bank nnz-balanced here, host-side, so the
-    engine never sorts inside a trace.  Safe to call repeatedly.
+    Stores them under ``ell_auto`` / ``ell2d_auto`` / ``bcsr_auto`` next to
+    the defaults, so non-auto methods keep working unchanged.  A pallas
+    entry with ``permute=True`` gets its bank nnz-balanced here, host-side,
+    so the engine never sorts inside a trace; a ``bsr`` entry gets its
+    BCSR bank blocked at the plan's (block_m, block_n) — an entry with no
+    block shape (a stale pre-v5 plan) is skipped, and the engine falls
+    back to dense for it.  Safe to call repeatedly.
     """
     for name, pe in plan.items():
         entry = params.get(name)
@@ -173,19 +226,25 @@ def apply_plan_to_params(params: Dict[str, Any],
             entry["ell_auto"] = ell_from_dense_conv(
                 w, pad_to=pad_to,
                 balance=pe.method == "pallas" and pe.permute)
+        elif (pe.method == "bsr" and pe.block_m is not None
+              and pe.block_n is not None):
+            entry["bcsr_auto"] = bcsr_conv_from_dense(
+                w, block=(pe.block_m, pe.block_n))
     return params
 
 
 def format_plan(plan: Dict[str, PlanEntry]) -> str:
     """Human-readable per-layer plan table (the paper's customization table)."""
     lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'te':>4} {'tf':>4} "
-             f"{'pad_to':>6} {'fuse':>5} {'pipe':>5} {'perm':>5} "
+             f"{'pad_to':>6} {'block':>8} {'fuse':>5} {'pipe':>5} {'perm':>5} "
              f"{'est_us':>10} source"]
     for name, pe in plan.items():
+        block = (f"{pe.block_m}x{pe.block_n}"
+                 if pe.block_m and pe.block_n else "-")
         lines.append(
             f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
             f"{pe.te or '-':>4} {pe.tf or '-':>4} "
-            f"{pe.pad_to or '-':>6} {'y' if pe.fuse else '-':>5} "
+            f"{pe.pad_to or '-':>6} {block:>8} {'y' if pe.fuse else '-':>5} "
             f"{'y' if pe.pipeline else '-':>5} "
             f"{'y' if pe.permute else '-':>5} "
             f"{pe.est_s * 1e6:>10.1f} {pe.source}")

@@ -4,7 +4,8 @@ Escoin's speedups come from picking, per conv layer, the execution strategy
 and tile shape that fit that layer's geometry and sparsity.  This module
 enumerates the discrete choices the tuner measures over:
 
-  method      ∈ {dense, lowered, csr-direct, pallas}  (paper Figs. 8-11 columns)
+  method      ∈ {dense, lowered, csr-direct, pallas, bsr}  (paper Figs. 8-11
+               columns, plus the beyond-paper BCSR MXU conv path)
   (tm,te,tf)  ∈ output-channel x output-spatial tilings whose halo'd input
                block + value block + out tile fit the VMEM budget (pallas
                only; te/tf = None means the untiled full-extent schedule)
@@ -24,12 +25,20 @@ enumerates the discrete choices the tuner measures over:
                (output channels sorted by row nnz) so every TM-tile holds
                rows of near-equal length; costs an inverse-permutation
                gather of the output.
+  (bm, bn)    ∈ BCSR block-shape candidates (bsr only): the tile
+               granularity of the block-pruned weight matrix.  Bigger bm
+               amortises the per-block patch gather over more systolic
+               rows; smaller bm wastes less channel padding.  bsr
+               candidates also carry (te, tf) spatial tiles and the fuse
+               axis, but no tm/pad_to/pipeline/permute — the block shape
+               plays tm's role and the kernel's halo DMA is blocking.
 
 Hardware-infeasible points are pruned statically: the Pallas kernel's packed
 index array (+ the int32 nnz row + the f32 bias row) must fit the SMEM
 budget, and every emitted tiling fits VMEM
-(``kernels.sparse_conv.ops.tile_candidates``).  Strided layers are eligible
-— the kernel applies the stride in-kernel.  Fully-dense layers (sparsity ==
+(``kernels.sparse_conv.ops.tile_candidates`` /
+``kernels.bsr_conv.ops.bsr_tile_candidates``).  Strided layers are eligible
+— the kernels apply the stride in-kernel.  Fully-dense layers (sparsity ==
 0) only ever run dense.
 """
 from __future__ import annotations
@@ -38,9 +47,11 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
+from repro.kernels.bsr_conv.ops import (BLOCK_CANDIDATES, bsr_smem_fits,
+                                        bsr_tile_candidates)
 from repro.kernels.sparse_conv.ops import smem_fits, tile_candidates
 
-METHODS = ("dense", "lowered", "csr-direct", "pallas")
+METHODS = ("dense", "lowered", "csr-direct", "pallas", "bsr")
 
 # ELL K-padding buckets (the paper's kernel-customization table keys on K
 # granularity).  8 is the repo-wide default; 4 trims padded work on very
@@ -106,6 +117,20 @@ class ConvGeometry:
         k = self.row_nnz_est
         return max(pad_to, ((k + pad_to - 1) // pad_to) * pad_to)
 
+    def bsr_grid(self, bm: int, bn: int) -> Tuple[int, int, int]:
+        """(gbm, gbn, kept-per-row estimate) of a (bm, bn)-blocked bank.
+
+        The kept estimate assumes block-structured pruning at this layer's
+        sparsity (``core.pruning.block_prune_conv``) — the deal the BCSR
+        path offers.  On unstructured-pruned weights nearly every tile
+        survives and the real bank is denser than this estimate; execution
+        stays correct, only slower than priced.
+        """
+        gbm = -(-self.m // bm)
+        gbn = -(-(self.c * self.r * self.s) // bn)
+        kept = min(gbn, max(1, math.ceil((1.0 - self.sparsity) * gbn)))
+        return gbm, gbn, kept
+
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
@@ -113,11 +138,12 @@ class Candidate:
 
     tm/te/tf are only meaningful for the pallas method (te/tf = None means
     the untiled full-extent spatial schedule); pad_to only for the sparse
-    formats (lowered / csr-direct / pallas); ``fuse`` only for pallas —
-    True executes the epilogue in-kernel; ``pipeline`` only for pallas —
-    True double-buffers the halo DMA; ``permute`` only for pallas — True
-    runs an nnz-balanced bank with the inverse permutation applied to the
-    output.
+    formats (lowered / csr-direct / pallas); ``fuse`` only for pallas and
+    bsr — True executes the epilogue in-kernel; ``pipeline`` only for
+    pallas — True double-buffers the halo DMA; ``permute`` only for pallas
+    — True runs an nnz-balanced bank with the inverse permutation applied
+    to the output; ``block_m``/``block_n`` only for bsr — the BCSR tile
+    shape (te/tf are meaningful for bsr too).
     """
 
     method: str
@@ -128,11 +154,14 @@ class Candidate:
     fuse: bool = False
     pipeline: bool = False
     permute: bool = False
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
                 "te": self.te, "tf": self.tf, "fuse": self.fuse,
-                "pipeline": self.pipeline, "permute": self.permute}
+                "pipeline": self.pipeline, "permute": self.permute,
+                "block_m": self.block_m, "block_n": self.block_n}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
@@ -140,7 +169,8 @@ class Candidate:
                    te=d.get("te"), tf=d.get("tf"),
                    fuse=bool(d.get("fuse", False)),
                    pipeline=bool(d.get("pipeline", False)),
-                   permute=bool(d.get("permute", False)))
+                   permute=bool(d.get("permute", False)),
+                   block_m=d.get("block_m"), block_n=d.get("block_n"))
 
 
 def pallas_feasible(g: ConvGeometry, k: int) -> bool:
@@ -150,6 +180,24 @@ def pallas_feasible(g: ConvGeometry, k: int) -> bool:
     if not smem_fits(g.m, k):
         return False
     return bool(tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride))
+
+
+def bsr_feasible(g: ConvGeometry, bm: int, bn: int) -> bool:
+    """The BCSR conv kernel needs its SMEM-resident block-column table and
+    at least one VMEM-feasible (te, tf) spatial tiling for this block
+    shape.
+
+    The SMEM gate uses ``gbn`` — the largest KB any real bank of this
+    geometry can pad to — not the mean kept estimate: the runtime check in
+    ``ops.bsr_conv`` sees the bank's actual (max-row) KB, and a static
+    gate below that bound could emit plans whose kernels silently fall
+    back at execution time.
+    """
+    gbm, gbn, _ = g.bsr_grid(bm, bn)
+    if not bsr_smem_fits(gbm, gbn):
+        return False
+    return bool(bsr_tile_candidates(g.c, g.e, g.f, g.r, g.s, g.stride,
+                                    bm, bn))
 
 
 def enumerate_candidates(g: ConvGeometry,
@@ -165,7 +213,8 @@ def enumerate_candidates(g: ConvGeometry,
     tile — each in blocking and double-buffered (``pipeline``) halo DMA
     flavours — pipelined tilings reserve VMEM for the second halo block,
     so their feasible sets can be smaller — and each tiling additionally in
-    an nnz-balanced (``permute``) variant.
+    an nnz-balanced (``permute``) variant.  BSR points enumerate the block
+    shape ladder x feasible spatial tilings x the fuse axis.
     """
     if g.sparsity <= 0.0:
         # Dense-kept layers (paper: conv1 et al.) have no sparse format.
@@ -173,6 +222,23 @@ def enumerate_candidates(g: ConvGeometry,
     out: List[Candidate] = []
     if "dense" in methods:
         out.append(Candidate("dense"))
+    if "bsr" in methods:
+        itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+        for bm, bn in BLOCK_CANDIDATES:
+            # SMEM gate at gbn, the worst-case KB any real bank pads to —
+            # the runtime check sees the actual (max-row) KB, and a
+            # mean-estimate gate could emit plans that silently fall back.
+            gbm, gbn, _ = g.bsr_grid(bm, bn)
+            if not bsr_smem_fits(gbm, gbn):
+                continue
+            for fuse in (False, True):
+                tilings = bsr_tile_candidates(
+                    g.c, g.e, g.f, g.r, g.s, g.stride, bm, bn,
+                    itemsize=itemsize,
+                    fuse_res=fuse and g.residual)[:MAX_TILINGS]
+                for te, tf in tilings:
+                    out.append(Candidate("bsr", te=te, tf=tf, fuse=fuse,
+                                         block_m=bm, block_n=bn))
     for pad_to in PAD_TO_BUCKETS:
         k = g.k_est(pad_to)
         if "lowered" in methods:

@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import bcsr_from_dense, block_prune
+from repro.kernels.bsr_matmul import ops
 from repro.kernels.bsr_matmul.ops import bsr_matmul, choose_tb
 from repro.kernels.bsr_matmul.ref import bsr_matmul_ref
 
@@ -78,3 +79,81 @@ def test_fully_pruned_block_rows():
 def test_choose_tb_divides():
     tb = choose_tb(1024, 128, 128, 2)
     assert 1024 % tb == 0
+
+
+# ---------------------------------------------------------------------------
+# ops edge cases: batch padding, tb override, dtype policy, VMEM fallback
+# ---------------------------------------------------------------------------
+
+def _blocked(rng, m, n, block, sp=0.5):
+    w = np.asarray(block_prune(
+        jnp.asarray(rng.standard_normal((m, n)).astype(np.float32)), sp, block))
+    return w, bcsr_from_dense(w, block)
+
+
+def test_non_dividing_batch_pads_and_slices(monkeypatch):
+    """An explicit tb that does not divide B must zero-pad the batch for
+    the kernel and slice the padding rows back off — values identical to
+    the unpadded oracle."""
+    rng = np.random.default_rng(7)
+    w, bc = _blocked(rng, 32, 64, (16, 16))
+    x = jnp.asarray(rng.standard_normal((10, 64)).astype(np.float32))
+    launches = []
+    real = ops.bsr_matmul_pallas
+    monkeypatch.setattr(
+        ops, "bsr_matmul_pallas",
+        lambda *a, **kw: launches.append((a[0].shape, kw)) or real(*a, **kw))
+    got = bsr_matmul(x, bc, tb=8, interpret=True)
+    assert got.shape == (10, 32)
+    # the kernel saw a padded batch: 10 -> 16 rows of tb=8
+    assert launches and launches[0][0] == (16, 64)
+    ref = bsr_matmul_ref(x, bc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_explicit_tb_override_honored(monkeypatch):
+    """A caller-pinned tb must reach the kernel verbatim (the autotuner's
+    knob), not be re-derived by choose_tb."""
+    rng = np.random.default_rng(9)
+    w, bc = _blocked(rng, 32, 64, (16, 16))
+    x = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    launches = []
+    real = ops.bsr_matmul_pallas
+    monkeypatch.setattr(
+        ops, "bsr_matmul_pallas",
+        lambda *a, **kw: launches.append(kw) or real(*a, **kw))
+    got = bsr_matmul(x, bc, tb=16, interpret=True)
+    assert launches and launches[0]["tb"] == 16
+    ref = bsr_matmul_ref(x, bc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_in_f32_accumulate_policy():
+    """Dtype policy: bf16 inputs/weights, f32 in-kernel accumulation, cast
+    back to the input dtype on exit.  The raw kernel output is f32; the
+    wrapper's result is bf16 and within bf16 rounding of the f32 oracle."""
+    rng = np.random.default_rng(11)
+    w, bc32 = _blocked(rng, 32, 64, (16, 16))
+    import dataclasses
+    bc16 = dataclasses.replace(bc32, blocks=bc32.blocks.astype(jnp.bfloat16))
+    x16 = jnp.asarray(rng.standard_normal((16, 64)), dtype=jnp.bfloat16)
+    got = bsr_matmul(x16, bc16, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    raw = ops.bsr_matmul_pallas(x16, bc16.blocks, bc16.blockcol, bc16.nblocks,
+                                tb=16, interpret=True)
+    assert raw.dtype == jnp.float32
+    ref = bsr_matmul_ref(x16.astype(jnp.float32), bc32)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_choose_tb_vmem_fallback_is_8():
+    """When even the smallest dividing tile busts the VMEM budget, choose_tb
+    pins the fallback batch tile to 8 (the MXU's minimum useful sublane
+    count) instead of erroring or returning an over-budget tile."""
+    # bm*bn*itemsize alone exceeds the 12 MiB budget -> every rung fails.
+    assert choose_tb(1024, 4096, 4096, 4) == 8
+    # and a budget-respecting case still prefers the largest dividing rung
+    assert choose_tb(1024, 128, 128, 4) == 1024

@@ -5,10 +5,12 @@ import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip module on clean envs
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (balance_ell_conv, bcsr_from_dense, bcsr_to_dense,
-                        csr_arrays_from_dense, ell_from_dense,
-                        ell_from_dense_conv, ell_to_dense, inverse_permutation,
-                        magnitude_prune, block_prune, stretch_offsets)
+from repro.core import (balance_ell_conv, bcsr_conv_from_dense,
+                        bcsr_conv_to_dense, bcsr_from_dense, bcsr_to_dense,
+                        block_prune_conv, csr_arrays_from_dense,
+                        ell_from_dense, ell_from_dense_conv, ell_to_dense,
+                        inverse_permutation, magnitude_prune, block_prune,
+                        stretch_offsets)
 from repro.core.sparse_format import bcsr_stack_from_dense
 
 
@@ -154,6 +156,96 @@ def test_balanced_bank_roundtrip_property(m, sparsity, seed):
     np.testing.assert_array_equal(_ell_conv_to_dense(bal), w)
     nnz = np.asarray(bal.nnz)
     assert (np.diff(nnz) <= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# BCSR property coverage: from_dense / to_dense / stack round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 70), st.integers(1, 70), st.integers(1, 16),
+       st.integers(1, 16), st.integers(1, 4), st.floats(0.0, 1.0),
+       st.integers(0, 1000))
+def test_bcsr_roundtrip_property_non_dividing(m, n, bm, bn, pad_to, density,
+                                              seed):
+    """Round-trip over arbitrary (shape, block, pad_to): non-dividing
+    shapes, ragged per-row tile counts, and the all-zero matrix where KB
+    clamps to 1.  KB must always be a pad_to multiple and at least the
+    densest row's tile count."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    w[rng.random(w.shape) >= density] = 0.0
+    b = bcsr_from_dense(w, (bm, bn), pad_to=pad_to)
+    np.testing.assert_allclose(np.asarray(bcsr_to_dense(b)), w)
+    counts = np.asarray(b.nblocks)
+    assert b.kb % pad_to == 0 and b.kb >= max(1, int(counts.max()))
+    # padding tiles are inert: all-zero data
+    blocks = np.asarray(b.blocks)
+    for i in range(blocks.shape[0]):
+        assert (blocks[i, counts[i]:] == 0).all()
+
+
+def test_bcsr_all_zero_kb_clamps_to_one():
+    b = bcsr_from_dense(np.zeros((17, 33), np.float32), (8, 8))
+    assert b.kb == 1
+    assert (np.asarray(b.nblocks) == 0).all()
+    np.testing.assert_array_equal(np.asarray(bcsr_to_dense(b)), 0.0)
+
+
+def test_bcsr_degenerate_pad_to_clamped():
+    """pad_to < 1 is clamped instead of crashing (same contract as the ELL
+    converters)."""
+    b = bcsr_from_dense(np.zeros((4, 8), np.float32), (4, 4), pad_to=0)
+    assert b.kb >= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 40),
+       st.integers(0, 1000))
+def test_bcsr_stack_roundtrip_property(layers, m, n, seed):
+    """Stacked layers with ragged per-layer tile counts pad to one common
+    KB; slicing the leading axis recovers each layer exactly."""
+    import jax
+    rng = np.random.default_rng(seed)
+    ws = np.stack([
+        np.where(rng.random((m, n)) < rng.uniform(0.05, 0.9),
+                 rng.standard_normal((m, n)), 0.0).astype(np.float32)
+        for _ in range(layers)])
+    stacked = bcsr_stack_from_dense(ws, (8, 8))
+    for i in range(layers):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        np.testing.assert_allclose(np.asarray(bcsr_to_dense(layer)), ws[i])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 20), st.integers(1, 6), st.integers(1, 3),
+       st.sampled_from([(4, 8), (8, 16), (8, 128)]),
+       st.floats(0.0, 0.95), st.integers(0, 1000))
+def test_bcsr_conv_roundtrip_property(m, c, r, block, sparsity, seed):
+    """BcsrConv round-trips any (block-pruned or not) filter bank through
+    the flattened (M, C*R*S) blocked layout."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, c, r, r)).astype(np.float32)
+    if sparsity > 0:
+        w = np.asarray(block_prune_conv(jnp.asarray(w), sparsity, block))
+    bc = bcsr_conv_from_dense(w, block=block)
+    assert bc.shape == w.shape and bc.block == block
+    np.testing.assert_allclose(np.asarray(bcsr_conv_to_dense(bc)), w)
+
+
+def test_block_prune_conv_keeps_dense_tiles():
+    """Surviving tiles of the flattened weight matrix stay fully dense —
+    each maps to one MXU contraction."""
+    rng = np.random.default_rng(5)
+    w = rng.standard_normal((16, 8, 3, 3)).astype(np.float32) + 0.5
+    p = np.asarray(block_prune_conv(jnp.asarray(w), 0.5, (8, 8)))
+    flat = p.reshape(16, 72)
+    padded = np.pad(flat, ((0, 0), (0, 8)))  # 72 -> 80 = 10 tiles of 8
+    tiles = padded.reshape(2, 8, 10, 8).transpose(0, 2, 1, 3)
+    for i in range(2):
+        for j in range(9):  # last tile column is padding
+            t = tiles[i, j]
+            assert (t == 0).all() or (t != 0).all()
 
 
 def test_block_prune_keeps_dense_tiles():

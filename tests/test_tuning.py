@@ -91,11 +91,18 @@ def test_choose_tm_is_first_candidate():
 
 
 def test_roofline_orders_sparse_below_dense():
-    # At 70% sparsity the direct method's bound must beat dense compute.
-    g = _geom(m=256, c=256, h=28, w=28)
-    t_dense = roofline_estimate(g, Candidate("dense"))
-    t_direct = roofline_estimate(g, Candidate("csr-direct", pad_to=8))
+    """The execution-unit split (VPU for per-nonzero FMA loops, MXU for
+    dense/bsr contractions) moves the dense-vs-direct crossover: at 95%
+    sparsity the direct method's bound still beats dense, but at a
+    moderate 70% the VPU-priced scan loses to the MXU-fed dense conv on a
+    compute-heavy geometry — the gap the bsr method exists to close."""
+    g_hi = _geom(m=256, c=256, h=28, w=28, sparsity=0.95)
+    t_dense = roofline_estimate(g_hi, Candidate("dense"))
+    t_direct = roofline_estimate(g_hi, Candidate("csr-direct", pad_to=8))
     assert t_direct < t_dense
+    g_mid = _geom(m=256, c=256, h=28, w=28, sparsity=0.7)
+    assert (roofline_estimate(g_mid, Candidate("csr-direct", pad_to=8))
+            > roofline_estimate(g_mid, Candidate("dense")))
 
 
 def test_roofline_pallas_tm_amortises_input():
@@ -256,6 +263,215 @@ def test_plan_entry_carries_pipeline_and_permute():
 
 
 # ---------------------------------------------------------------------------
+# bsr axis (BCSR MXU conv): block-shape candidates + MXU-vs-VPU crossover
+# ---------------------------------------------------------------------------
+
+def test_candidates_include_bsr_block_shapes():
+    """Sparse layers get bsr candidates across the block ladder, each with
+    a VMEM-feasible spatial tiling and fused/unfused variants; tm, pad_to
+    and the pallas-only schedule flags stay unset on them."""
+    from repro.kernels.bsr_conv.ops import bsr_tiling_fits
+
+    g = _geom()
+    cands = [c for c in enumerate_candidates(g) if c.method == "bsr"]
+    assert cands
+    assert {(c.block_m, c.block_n) for c in cands} >= {(8, 128), (16, 128)}
+    assert any(c.fuse for c in cands) and any(not c.fuse for c in cands)
+    for cd in cands:
+        assert cd.tm is None and cd.pad_to is None
+        assert not cd.pipeline and not cd.permute
+        assert cd.te is not None and cd.tf is not None
+        assert bsr_tiling_fits(g.c, g.r, g.s, g.stride, cd.block_m,
+                               cd.block_n, cd.te, cd.tf,
+                               fuse_res=cd.fuse and g.residual)
+
+
+def test_roofline_bsr_beats_vpu_on_moderate_sparsity():
+    """The crossover the bsr path exists for: on a compute-heavy layer at
+    moderate (~62%) sparsity, the MXU-priced bsr bound must beat the best
+    VPU-priced ELL pallas bound and the dense bound — while at extreme
+    sparsity the per-nonzero ELL loop does so little work it wins back."""
+    g = _geom(m=192, c=64, h=56, w=56, sparsity=0.62, batch=1)
+    cands = enumerate_candidates(g)
+    t_bsr = min(roofline_estimate(g, c) for c in cands if c.method == "bsr")
+    t_ell = min(roofline_estimate(g, c) for c in cands if c.method == "pallas")
+    t_dense = roofline_estimate(g, Candidate("dense"))
+    assert t_bsr < t_ell and t_bsr < t_dense
+    g_hi = _geom(m=192, c=64, h=56, w=56, sparsity=0.98, batch=1)
+    cands_hi = enumerate_candidates(g_hi)
+    t_bsr_hi = min(roofline_estimate(g_hi, c)
+                   for c in cands_hi if c.method == "bsr")
+    t_ell_hi = min(roofline_estimate(g_hi, c)
+                   for c in cands_hi if c.method == "pallas")
+    assert t_ell_hi < t_bsr_hi
+
+
+def test_roofline_bsr_bigger_bm_amortises_gather():
+    """The tile-gather-vs-systolic tradeoff: with identical spatial tiling
+    and kept-block fraction, a taller block (bigger bm) amortises the VPU
+    patch gather over more MXU rows, so its compute term is no worse."""
+    from repro.tuning.measure import _bsr_terms
+
+    g = _geom(m=256, c=256, h=28, w=28, sparsity=0.6)
+    t8, _, _ = _bsr_terms(g, Candidate("bsr", te=28, tf=28,
+                                       block_m=8, block_n=128))
+    t64, _, _ = _bsr_terms(g, Candidate("bsr", te=28, tf=28,
+                                        block_m=64, block_n=128))
+    assert t64 <= t8
+
+
+def test_plan_entry_carries_block_shape():
+    pe = PlanEntry(method="bsr", te=16, tf=16, fuse=True,
+                   block_m=32, block_n=128)
+    assert pe.candidate.block_m == 32 and pe.candidate.block_n == 128
+    d = pe.to_dict()
+    assert d["block_m"] == 32 and d["block_n"] == 128
+    assert PlanEntry.from_dict(d) == pe
+
+
+def test_auto_executes_bsr_plan():
+    """A plan entry pinning the bsr method — block shape, spatial tiling,
+    fused epilogue — must execute through method="auto" (interpret mode)
+    and match the dense oracle, both with the bank prebuilt by
+    apply_plan_to_params and blocked at trace time without it."""
+    net = [cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+           cnn.Conv("c1", 16, 3, 1, 1, sparsity=0.7), cnn.Relu()]
+    rng = np.random.default_rng(31)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    x = jnp.asarray(rng.standard_normal((1, 3, 10, 10)).astype(np.float32))
+    plan = {"c0": PlanEntry(method="dense"),
+            "c1": PlanEntry(method="bsr", te=6, tf=6, fuse=True,
+                            block_m=8, block_n=32)}
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    # without apply_plan_to_params: the engine blocks the bank at trace time
+    y_auto = cnn.cnn_forward(net, params, x, method="auto", plan=plan)
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    # with it: the prebuilt bcsr_auto bank is used
+    apply_plan_to_params(params, plan)
+    assert params["c1"]["bcsr_auto"].block == (8, 32)
+    y_auto2 = cnn.cnn_forward(net, params, x, method="auto", plan=plan)
+    np.testing.assert_allclose(np.asarray(y_auto2), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_roofline_with_weights_recosts_bsr_from_actual_bank():
+    """Regression: the geometry-only bsr estimate assumes block-structured
+    pruning, but an unstructured magnitude-pruned bank keeps nearly every
+    tile.  Weights-aware roofline planning must price bsr at the true
+    kept-block count: the estimate-vs-honest bound gap must show, and on a
+    high-sparsity layer — where the cheap per-nonzero ELL loop is the real
+    winner — the winner must flip off the MXU path the estimate picked."""
+    from repro.core import block_prune_conv, magnitude_prune
+    from repro.tuning import plan_layer
+    from repro.tuning.measure import bcsr_true_kept
+
+    g = ConvGeometry(name="l", m=256, c=256, h=14, w=14, r=3, s=3, stride=1,
+                     pad=1, sparsity=0.9, batch=1)
+    rng = np.random.default_rng(37)
+    w = np.asarray(magnitude_prune(jnp.asarray(
+        rng.standard_normal((256, 256, 3, 3)).astype(np.float32)), 0.9))
+    # unstructured pruning keeps essentially every (8, 128) tile
+    gbn = -(-256 * 9 // 128)
+    assert bcsr_true_kept(w, 8, 128) > 0.9 * gbn
+    # the estimate prices bsr at ~10% of the tiles and picks it...
+    assert plan_layer(g, mode="roofline").method == "bsr"
+    # ...the true near-dense bank costs more, and the winner flips
+    cand = Candidate("bsr", te=14, tf=14, block_m=8, block_n=128)
+    assert (roofline_estimate(g, cand, w_dense=w)
+            > roofline_estimate(g, cand))
+    assert plan_layer(g, mode="roofline", w_dense=w).method != "bsr"
+    # a genuinely block-pruned bank keeps the MXU pick
+    wb = np.asarray(block_prune_conv(jnp.asarray(
+        rng.standard_normal((256, 256, 3, 3)).astype(np.float32)),
+        0.9, (8, 128)))
+    assert plan_layer(g, mode="roofline", w_dense=wb).method == "bsr"
+
+
+def test_weights_aware_plan_reads_legacy_untagged_entries(monkeypatch):
+    """Regression: weights-aware plans key on layer_key + a weight-structure
+    tag, but pre-tag caches (v1-v4 migrations, weight-free v5 runs) are
+    untagged.  A non-bsr legacy winner must be inherited without
+    re-scoring — only bsr entries are structure-sensitive and must be
+    re-scored under the tagged key."""
+    from repro.core import magnitude_prune
+    from repro.engine import lower
+    import repro.tuning.planner as planner_mod
+    from repro.tuning import plan_program
+
+    # tiny geometry: the weight-free roofline winner here is not bsr
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.7), cnn.Relu()]
+    program = lower(net, (3, 10, 10))
+    cache = PlanCache()
+    plan0 = plan_program(program, batch=1, mode="roofline", cache=cache)
+    assert plan0["c1"].method != "bsr"
+    legacy_keys = set(cache.entries)
+    assert not any("_bk" in k for k in legacy_keys)
+
+    rng = np.random.default_rng(43)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    calls = []
+    orig = planner_mod.plan_layer
+    monkeypatch.setattr(planner_mod, "plan_layer",
+                        lambda g, **kw: calls.append(g.name) or orig(g, **kw))
+    plan1 = plan_program(program, batch=1, mode="roofline", cache=cache,
+                         params=params)
+    # the untagged non-bsr entry was inherited: zero re-scoring, same plan
+    assert calls == []
+    assert plan1["c1"] == plan0["c1"]
+    assert set(cache.entries) == legacy_keys
+
+    # a legacy *bsr* entry must NOT be inherited across structures: plant
+    # one at the untagged key of a geometry whose estimate picks bsr
+    net2 = [cnn.Conv("c2", 192, 3, 1, 1, sparsity=0.62), cnn.Relu()]
+    program2 = lower(net2, (64, 56, 56))
+    cache2 = PlanCache()
+    plan2 = plan_program(program2, batch=1, mode="roofline", cache=cache2)
+    assert plan2["c2"].method == "bsr"
+    calls.clear()
+    params2 = {"c2": {"w": jnp.asarray(np.asarray(magnitude_prune(jnp.asarray(
+        np.random.default_rng(0).standard_normal(
+            (192, 64, 3, 3)).astype(np.float32)), 0.62))),
+        "b": jnp.zeros((192,), jnp.float32)}}
+    plan_program(program2, batch=1, mode="roofline", cache=cache2,
+                 params=params2)
+    assert calls == ["c2"]  # re-scored under the structure-tagged key
+    assert any("_bk" in k for k in cache2.entries)
+
+
+def test_auto_plan_uses_bound_params_for_bsr_costing(monkeypatch):
+    """The engine's self-tuned roofline plan must pass its bound params so
+    bsr costing sees the actual bank structure."""
+    from repro.engine import CnnEngine, lower
+    import repro.tuning.planner as planner_mod
+
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.7), cnn.Relu()]
+    rng = np.random.default_rng(41)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    engine = CnnEngine(lower(net, (3, 10, 10)), params)
+    seen = {}
+    orig = planner_mod.plan_program
+
+    def spy(program, **kw):
+        seen["params"] = kw.get("params")
+        return orig(program, **kw)
+
+    monkeypatch.setattr(planner_mod, "plan_program", spy)
+    engine._auto_plan(1)
+    assert seen["params"] is params
+
+
+def test_wall_mode_excludes_bsr_off_tpu():
+    """Like the ELL pallas kernel, the bsr kernel is interpret-mode off-TPU
+    — wall-timing it would measure Python, so it is not measurable."""
+    from repro.tuning import measurable
+
+    assert not measurable(Candidate("bsr", block_m=8, block_n=128), "cpu")
+    assert measurable(Candidate("bsr", block_m=8, block_n=128), "tpu")
+    assert measurable(Candidate("csr-direct", pad_to=8), "cpu")
+
+
+# ---------------------------------------------------------------------------
 # cache / planner round-trip
 # ---------------------------------------------------------------------------
 
@@ -315,14 +531,16 @@ def test_plan_cache_v1_migration(tmp_path):
     assert pe.candidate.te is None and pe.candidate.tf is None
     assert pe.candidate.fuse is False
     assert pe.candidate.pipeline is False and pe.candidate.permute is False
-    out = tmp_path / "v4.json"
+    assert pe.candidate.block_m is None and pe.candidate.block_n is None
+    out = tmp_path / "v5.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 4
+    assert doc["version"] == CACHE_VERSION == 5
     assert doc["entries"]["k1"]["te"] is None
     assert doc["entries"]["k1"]["fuse"] is False
     assert doc["entries"]["k1"]["pipeline"] is False
     assert doc["entries"]["k1"]["permute"] is False
+    assert doc["entries"]["k1"]["block_m"] is None
     # and the migrated file round-trips as current-version
     assert PlanCache(str(out)).get("k1") == pe
 
@@ -331,7 +549,7 @@ def test_plan_cache_v2_migration_roundtrip(tmp_path):
     """v2 documents (te/tf but no fuse/pipeline/permute) load via migration
     — entries get fuse=False (the unfused three-pass epilogue) and
     pipeline=permute=False (the v2 kernel's blocking single-buffer DMA) —
-    and the re-saved v4 file round-trips identically."""
+    and the re-saved v5 file round-trips identically."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -353,7 +571,7 @@ def test_plan_cache_v2_migration_roundtrip(tmp_path):
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 4
+    assert doc["version"] == CACHE_VERSION == 5
     assert doc["entries"]["kp"]["fuse"] is False
     assert doc["entries"]["kp"]["pipeline"] is False
     reloaded = PlanCache(str(out))
@@ -364,7 +582,7 @@ def test_plan_cache_v3_migration_roundtrip(tmp_path):
     """v3 documents (fuse but no pipeline/permute) load via migration —
     entries keep their fuse flag and get pipeline=permute=False, the
     blocking natural-order schedule every v3 kernel ran — and the re-saved
-    v4 file round-trips identically."""
+    v5 file round-trips identically."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -388,11 +606,103 @@ def test_plan_cache_v3_migration_roundtrip(tmp_path):
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 4
+    assert doc["version"] == CACHE_VERSION == 5
     assert doc["entries"]["kf"]["fuse"] is True
     assert doc["entries"]["kf"]["pipeline"] is False
     assert doc["entries"]["kf"]["permute"] is False
     assert PlanCache(str(out)).entries == cache.entries
+
+
+def test_plan_cache_v4_migration_roundtrip(tmp_path):
+    """v4 documents (pipeline/permute but no block shape) load via
+    migration — entries keep their schedule flags and get block_m =
+    block_n = None (no pre-v5 kernel ran blocked) — and the re-saved v5
+    file round-trips identically."""
+    import json
+
+    from repro.tuning.cache import CACHE_VERSION
+
+    path = tmp_path / "v4.json"
+    path.write_text(json.dumps({
+        "version": 4,
+        "entries": {
+            "kp": {"method": "pallas", "tm": 8, "te": 16, "tf": 16,
+                   "pad_to": 8, "fuse": True, "pipeline": True,
+                   "permute": True, "est_s": 4e-5, "source": "measured"},
+        }}))
+    cache = PlanCache(str(path))
+    pe = cache.get("kp")
+    assert pe == PlanEntry(method="pallas", tm=8, te=16, tf=16, pad_to=8,
+                           fuse=True, pipeline=True, permute=True,
+                           block_m=None, block_n=None,
+                           est_s=4e-5, source="measured")
+    out = tmp_path / "migrated.json"
+    cache.save(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["version"] == CACHE_VERSION == 5
+    assert doc["entries"]["kp"]["pipeline"] is True
+    assert doc["entries"]["kp"]["block_m"] is None
+    assert PlanCache(str(out)).entries == cache.entries
+
+
+def test_plan_cache_migration_chain_v1_to_v5(tmp_path):
+    """The full migration chain: one fixture per historical schema (v1-v4)
+    loads, defaults exactly the fields its kernels predate, re-persists as
+    v5, and the v5 file round-trips bit-for-bit."""
+    import json
+
+    from repro.tuning.cache import CACHE_VERSION, MIGRATABLE_VERSIONS
+
+    fixtures = {
+        1: ({"method": "pallas", "tm": 64, "pad_to": 8},
+            PlanEntry(method="pallas", tm=64, pad_to=8)),
+        2: ({"method": "pallas", "tm": 32, "te": 16, "tf": 16, "pad_to": 4},
+            PlanEntry(method="pallas", tm=32, te=16, tf=16, pad_to=4)),
+        3: ({"method": "pallas", "tm": 16, "te": 32, "tf": 32, "pad_to": 8,
+             "fuse": True},
+            PlanEntry(method="pallas", tm=16, te=32, tf=32, pad_to=8,
+                      fuse=True)),
+        4: ({"method": "pallas", "tm": 8, "te": 16, "tf": 16, "pad_to": 8,
+             "fuse": True, "pipeline": True, "permute": True},
+            PlanEntry(method="pallas", tm=8, te=16, tf=16, pad_to=8,
+                      fuse=True, pipeline=True, permute=True)),
+    }
+    assert set(fixtures) == set(MIGRATABLE_VERSIONS)
+    for ver, (raw, expect) in fixtures.items():
+        p = tmp_path / f"v{ver}.json"
+        p.write_text(json.dumps({"version": ver, "entries": {"k": raw}}))
+        cache = PlanCache(str(p))
+        assert cache.get("k") == expect
+        assert cache.get("k").block_m is None
+        out = tmp_path / f"v{ver}-migrated.json"
+        cache.save(str(out))
+        doc = json.loads(out.read_text())
+        assert doc["version"] == CACHE_VERSION == 5
+        assert PlanCache(str(out)).entries == cache.entries
+
+
+def test_stale_v4_bsr_plan_falls_back_to_dense(tmp_path):
+    """A pre-v5 plan entry claiming method="bsr" migrates with no block
+    shape; the engine must treat it as stale and execute the dense path —
+    numerically identical to method="dense" — instead of crashing."""
+    import json
+
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps({
+        "version": 4,
+        "entries": {"k": {"method": "bsr", "te": 8, "tf": 8,
+                          "est_s": 1e-5, "source": "roofline"}}}))
+    pe = PlanCache(str(path)).get("k")
+    assert pe.method == "bsr" and pe.block_m is None and pe.block_n is None
+    net = [cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu()]
+    rng = np.random.default_rng(29)
+    params = cnn.init_cnn(net, 3, rng, 10)
+    x = jnp.asarray(rng.standard_normal((1, 3, 10, 10)).astype(np.float32))
+    apply_plan_to_params(params, {"c1": pe})
+    assert "bcsr_auto" not in params["c1"]  # nothing to build from a stale entry
+    y_auto = cnn.cnn_forward(net, params, x, method="auto", plan={"c1": pe})
+    y_dense = cnn.cnn_forward(net, params, x, method="dense")
+    np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_dense))
 
 
 def test_wall_mode_measures_and_picks(tmp_path):
