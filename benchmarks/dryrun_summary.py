@@ -43,7 +43,9 @@ def render() -> None:
 def smoke() -> None:
     """Import every benchmark suite and spot-check the fig11 table rows, the
     BENCH_sparse_conv.json schedule rows (pipeline axis + the bsr MXU
-    crossover), and the plan-cache v1→v5 migrations."""
+    crossover + the zero-silent-fallback invariant), the plan-cache v1→v5
+    migrations, and one telemetry-traced engine forward (valid Chrome-trace
+    JSON, per-op ExecutionReport, zero fallbacks)."""
     # Import errors in any figure module fail here, like benchmarks.run would.
     from benchmarks import (bench_sparse_conv, fig8_sparse_conv,  # noqa: F401
                             fig9_breakdown, fig10_locality, fig11_end2end,
@@ -66,8 +68,10 @@ def smoke() -> None:
         print(r)
     _smoke_bench_json(bench_sparse_conv)
     _smoke_cache_migrations()
+    _smoke_traced_forward()
     print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
-          "bench json pipeline + bsr rows, cache v1-v4 -> v5 migrations")
+          "bench json pipeline + bsr rows + zero fallbacks, cache v1-v4 -> "
+          "v5 migrations, traced forward valid")
 
 
 def _smoke_bench_json(bench_sparse_conv) -> None:
@@ -97,6 +101,12 @@ def _smoke_bench_json(bench_sparse_conv) -> None:
         # the invariants already ran inside run(); assert they are wired
         bench_sparse_conv.check_stall_invariant(doc)
         bench_sparse_conv.check_mxu_crossover(doc)
+        bench_sparse_conv.check_zero_fallback(doc)
+        # every record must carry the fallback field (null == plan runs)
+        for rec in layers:
+            if "fallback" not in rec:
+                raise SystemExit(
+                    f"bench smoke: {rec['name']} missing the fallback field")
 
 
 def _smoke_cache_migrations() -> None:
@@ -138,6 +148,60 @@ def _smoke_cache_migrations() -> None:
                 raise SystemExit(
                     f"cache smoke: v{ver} re-persisted as {doc['version']}, "
                     f"want {CACHE_VERSION}")
+
+
+def _smoke_traced_forward() -> None:
+    """One telemetry-enabled engine forward on a micro network must produce
+    a per-op ExecutionReport with zero silent fallbacks and a Chrome-trace
+    JSON that passes schema validation."""
+    import tempfile
+
+    import numpy as np
+
+    from repro import telemetry
+    from repro.engine import CnnEngine, lower
+    from repro.models import cnn
+    from repro.tuning import PlanCache, apply_plan_to_params, plan_program
+
+    micro = [
+        cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+        cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu(),
+        cnn.Pool("gap"), cnn.FC("fc", 10),
+    ]
+    rng = np.random.default_rng(0)
+    program = lower(micro, (3, 8, 8))
+    params = cnn.init_cnn(micro, 3, rng, 8)
+    plan = plan_program(program, batch=1, mode="roofline", cache=PlanCache())
+    apply_plan_to_params(params, plan)
+    engine = CnnEngine(program, params, plan)
+    x = rng.standard_normal((1, 3, 8, 8)).astype(np.float32)
+
+    telemetry.reset()
+    with telemetry.enabled():
+        engine(x, "auto")
+        report = engine.last_report
+        if report is None:
+            raise SystemExit("trace smoke: no ExecutionReport recorded")
+        if report.fallback_count:
+            raise SystemExit(
+                "trace smoke: traced forward took silent fallbacks: "
+                f"{[(o.name, o.fallback_reason) for o in report.fallback_ops]}")
+        conv_ops = [o for o in report.ops]
+        if not conv_ops or any(not o.method_executed for o in conv_ops):
+            raise SystemExit("trace smoke: report missing per-op methods")
+        tracer = telemetry.get_tracer()
+        if len(tracer) < len(conv_ops):
+            raise SystemExit(
+                f"trace smoke: {len(tracer)} trace events for "
+                f"{len(conv_ops)} conv ops")
+        with tempfile.TemporaryDirectory() as td:
+            path = pathlib.Path(td) / "trace.json"
+            tracer.export(str(path))  # export() validates before writing
+            doc = json.loads(path.read_text())
+            telemetry.validate_chrome_trace(doc)
+            if not any(ev.get("ph") == "X" for ev in doc["traceEvents"]):
+                raise SystemExit("trace smoke: no complete (X) span events")
+    telemetry.reset()
 
 
 def main() -> None:

@@ -15,13 +15,17 @@ the pre-engine executor ran — bit-for-bit compatible.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.pruning import magnitude_prune
@@ -29,14 +33,42 @@ from repro.core.sparse_format import (balance_ell_conv, bcsr_conv_from_dense,
                                       ell_from_dense, ell_from_dense_conv)
 from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
                                   ReluOp, ResidualAddOp)
-from repro.kernels.bsr_conv.ops import bsr_conv
+from repro.kernels.bsr_conv.ops import bsr_conv, resolve_bsr_schedule
+from repro.kernels.sparse_conv.ops import resolve_schedule
 from repro.kernels.sparse_conv.ops import sparse_conv as pallas_sparse_conv
+from repro.telemetry.fallback import record_fallback
+from repro.telemetry.report import ExecutionReport, OpReport
 
 METHODS = ("dense", "lowered", "csr-direct", "pallas", "bsr", "auto")
 
 # Default BCSR tile shape for a direct ``method="bsr"`` call (no tuned plan
 # pinning one); the autotuner picks per layer from the block ladder.
 DEFAULT_BSR_BLOCK = (8, 128)
+
+
+@dataclasses.dataclass
+class _Decision:
+    """One conv op's resolved dispatch knobs — what the plan (or the
+    caller) asked for, before the kernel's own feasibility checks.
+
+    Pure Python over plan entries; shared by ``_conv`` (trace time) and
+    ``execution_report`` (no execution), so the report can never disagree
+    with what the executor dispatches.
+    """
+
+    auto: bool                    # method="auto" (plan-driven) call
+    pe: Any                       # the PlanEntry consulted (None without)
+    method: str                   # method to execute (pre-kernel-checks)
+    method_planned: str           # what the plan/caller asked for
+    tm: Optional[int]
+    te: Optional[int]
+    tf: Optional[int]
+    pipeline: Optional[bool]
+    permute: bool
+    fuse: bool
+    block: Optional[Tuple[int, int]]
+    engine_reason: Optional[str]  # engine-level fallback (stale bsr plan)
+    provenance: str
 
 
 def init_conv_params(program: Program, rng: np.random.Generator,
@@ -108,6 +140,13 @@ class CnnEngine:
         self.fc_weights = self._bind_fc(program, params)
         self._fns: Dict[Any, Any] = {}
         self._auto_plans: Dict[int, Dict[str, Any]] = {}
+        # Trace-built BCSR banks, keyed (layer, block): params are never
+        # mutated (their leaf identities fingerprint the engine memo), so
+        # banks built for a plan block that differs from the prebuilt one
+        # are cached here instead of rebuilt every trace/report.
+        self._bcc_cache: Dict[Any, Any] = {}
+        # The ExecutionReport of the most recent telemetry-enabled forward.
+        self.last_report: Optional[ExecutionReport] = None
 
     # -- bind -------------------------------------------------------------
 
@@ -143,20 +182,25 @@ class CnnEngine:
             self._auto_plans[batch] = plan
         return plan
 
-    # -- execute ----------------------------------------------------------
+    # -- dispatch decisions ------------------------------------------------
 
-    def _conv(self, op: ConvOp, x: jax.Array, res: Optional[jax.Array],
-              method: str, plan, fuse_override: Optional[bool]) -> jax.Array:
-        entry = self.params[op.name]
+    def _plan_decision(self, op: ConvOp, method: str, plan,
+                       fuse_override: Optional[bool]) -> _Decision:
+        """Resolve one conv op's dispatch knobs from the plan (or the
+        caller's direct method) — the pure-Python half of ``_conv``."""
+        auto = method == "auto"
         tm = te = tf = None
         pipeline = None  # ops.sparse_conv auto-picks when the 2nd halo fits
         permute = False
         block = None     # bsr: None = any prebuilt bank (or the default)
-        bcc = entry.get("bcsr_auto")
         fuse = True if fuse_override is None else fuse_override
-        if method == "auto":
+        pe = None
+        engine_reason = None
+        provenance = "direct"
+        if auto:
             pe = (plan or {}).get(op.name)
             method = pe.method if pe is not None else "dense"
+            provenance = pe.provenance if pe is not None else "default"
             if pe is not None:
                 tm, te, tf = pe.tm, pe.te, pe.tf
                 pipeline, permute = pe.pipeline, pe.permute
@@ -167,11 +211,46 @@ class CnnEngine:
                         # Stale plan predating the v5 schema: no block
                         # shape to run — fall back to the dense executor.
                         method = "dense"
+                        engine_reason = "stale_plan_no_block"
                     else:
                         block = (pe.block_m, pe.block_n)
+        method_planned = pe.method if (auto and pe is not None) else (
+            "dense" if auto else method)
+        return _Decision(auto=auto, pe=pe, method=method,
+                         method_planned=method_planned, tm=tm, te=te, tf=tf,
+                         pipeline=pipeline, permute=permute, fuse=fuse,
+                         block=block, engine_reason=engine_reason,
+                         provenance=provenance)
+
+    def _bcsr_for(self, op: ConvOp, entry: Dict[str, Any], block):
+        """The BCSR bank this op runs: the prebuilt ``bcsr_auto`` when its
+        block matches, else one blocked from the bound dense weights —
+        built host-side once per (layer, block) and cached on the engine
+        (``entry["w"]`` is a concrete bound array, so the conversion is
+        trace-safe and baked into the compile)."""
+        bcc = entry.get("bcsr_auto")
+        if bcc is not None and (block is None or bcc.block == block):
+            return bcc
+        key = (op.name, block or DEFAULT_BSR_BLOCK)
+        bcc = self._bcc_cache.get(key)
+        if bcc is None:
+            bcc = bcsr_conv_from_dense(np.asarray(entry["w"]),
+                                       block=block or DEFAULT_BSR_BLOCK)
+            self._bcc_cache[key] = bcc
+        return bcc
+
+    # -- execute ----------------------------------------------------------
+
+    def _conv(self, op: ConvOp, x: jax.Array, res: Optional[jax.Array],
+              method: str, plan, fuse_override: Optional[bool]) -> jax.Array:
+        entry = self.params[op.name]
+        d = self._plan_decision(op, method, plan, fuse_override)
+        method, fuse = d.method, d.fuse
+        tm, te, tf, pipeline = d.tm, d.te, d.tf, d.pipeline
+        if d.auto:
             ell = entry.get("ell_auto", entry.get("ell"))
             ell2d = entry.get("ell2d_auto", entry.get("ell2d"))
-            if (permute and method == "pallas" and ell is not None
+            if (d.permute and method == "pallas" and ell is not None
                     and ell.perm is None):
                 # Plan wants the nnz-balanced bank but the params carry a
                 # natural-order one (apply_plan_to_params not run): balance
@@ -179,14 +258,16 @@ class CnnEngine:
                 ell = balance_ell_conv(ell)
         else:
             ell, ell2d = entry.get("ell"), entry.get("ell2d")
-        if method == "bsr" and op.sparsity > 0 and (
-                bcc is None or (block is not None and bcc.block != block)):
-            # Plan block differs from the prebuilt bank (or
-            # apply_plan_to_params wasn't run): block the dense weights at
-            # trace time — ``entry["w"]`` is a concrete bound array, so the
-            # host-side conversion runs once per compile and is baked in.
-            bcc = bcsr_conv_from_dense(np.asarray(entry["w"]),
-                                       block=block or DEFAULT_BSR_BLOCK)
+        if d.engine_reason is not None:
+            # Engine-level silent degradation (stale bsr plan): report it
+            # like the kernels report theirs — this runs at trace time.
+            record_fallback(
+                "engine", d.engine_reason, layer=op.name,
+                geometry=f"m={op.m} c={op.c} e={op.e} f={op.f}",
+                fallback_to="dense")
+        bcc = None
+        if method == "bsr" and op.sparsity > 0:
+            bcc = self._bcsr_for(op, entry, d.block)
         b = entry["b"]
         if op.sparsity == 0 or method == "dense":
             y = dense_conv(x, entry["w"], stride=op.stride, padding=op.pad)
@@ -201,19 +282,19 @@ class CnnEngine:
                 return pallas_sparse_conv(
                     x, ell, stride=op.stride, padding=op.pad, tm=tm, te=te,
                     tf=tf, bias=b, fuse_relu=op.fuse_relu, residual=res,
-                    pipeline=pipeline, interpret=interp)
+                    pipeline=pipeline, interpret=interp, layer=op.name)
             y = pallas_sparse_conv(x, ell, stride=op.stride, padding=op.pad,
                                    tm=tm, te=te, tf=tf, pipeline=pipeline,
-                                   interpret=interp)
+                                   interpret=interp, layer=op.name)
         elif method == "bsr":
             interp = jax.default_backend() != "tpu"
             if fuse:
                 return bsr_conv(
                     x, bcc, stride=op.stride, padding=op.pad, te=te, tf=tf,
                     bias=b, fuse_relu=op.fuse_relu, residual=res,
-                    interpret=interp)
+                    interpret=interp, layer=op.name)
             y = bsr_conv(x, bcc, stride=op.stride, padding=op.pad, te=te,
-                         tf=tf, interpret=interp)
+                         tf=tf, interpret=interp, layer=op.name)
         else:
             raise ValueError(method)
         # Unfused epilogue: the exact op sequence of the pre-engine executor.
@@ -224,29 +305,33 @@ class CnnEngine:
             y = jax.nn.relu(y)
         return y
 
+    def _exec_op(self, op, vals: Dict[int, jax.Array], method: str, plan,
+                 fuse_override: Optional[bool]) -> jax.Array:
+        """Execute one program op against the value table."""
+        if isinstance(op, ConvOp):
+            res = vals[op.res] if op.res is not None else None
+            return self._conv(op, vals[op.src], res, method, plan,
+                              fuse_override)
+        if isinstance(op, ReluOp):
+            return jax.nn.relu(vals[op.src])
+        if isinstance(op, PoolOp):
+            return _pool(op, vals[op.src])
+        if isinstance(op, ConcatOp):
+            return jnp.concatenate([vals[s] for s in op.srcs], axis=1)
+        if isinstance(op, ResidualAddOp):
+            y = vals[op.a] + vals[op.b]
+            return jax.nn.relu(y) if op.fuse_relu else y
+        if isinstance(op, FCOp):
+            flat = vals[op.src].reshape(vals[op.src].shape[0], -1)
+            return flat @ self.fc_weights[(op.name, op.in_f)]
+        raise TypeError(f"unknown op {op!r}")
+
     def _execute(self, x: jax.Array, *, method: str, plan,
                  fuse_override: Optional[bool]) -> jax.Array:
         vals: Dict[int, jax.Array] = {0: x}
         for op in self.program.ops:
-            if isinstance(op, ConvOp):
-                res = vals[op.res] if op.res is not None else None
-                vals[op.out] = self._conv(op, vals[op.src], res, method, plan,
-                                          fuse_override)
-            elif isinstance(op, ReluOp):
-                vals[op.out] = jax.nn.relu(vals[op.src])
-            elif isinstance(op, PoolOp):
-                vals[op.out] = _pool(op, vals[op.src])
-            elif isinstance(op, ConcatOp):
-                vals[op.out] = jnp.concatenate([vals[s] for s in op.srcs],
-                                               axis=1)
-            elif isinstance(op, ResidualAddOp):
-                y = vals[op.a] + vals[op.b]
-                vals[op.out] = jax.nn.relu(y) if op.fuse_relu else y
-            elif isinstance(op, FCOp):
-                flat = vals[op.src].reshape(vals[op.src].shape[0], -1)
-                vals[op.out] = flat @ self.fc_weights[(op.name, op.in_f)]
-            else:
-                raise TypeError(f"unknown op {op!r}")
+            vals[op.out] = self._exec_op(op, vals, method, plan,
+                                         fuse_override)
         return vals[self.program.out]
 
     def __call__(self, x: jax.Array, method: str = "dense", *,
@@ -258,8 +343,172 @@ class CnnEngine:
             plan = self._auto_plan(int(x.shape[0]))
         key = (method, tuple(x.shape), str(x.dtype), fuse, id(plan))
         fn = self._fns.get(key)
+        jit_hit = fn is not None
         if fn is None:
             fn = jax.jit(functools.partial(
                 self._execute, method=method, plan=plan, fuse_override=fuse))
             self._fns[key] = fn
+        if telemetry.is_enabled():
+            # Dispatch-time observation: the report is built from the same
+            # _plan_decision the trace uses, never from inside the jit.
+            self._record_forward(tuple(x.shape), str(x.dtype), method, plan,
+                                 fuse, jit_hit)
         return fn(x)
+
+    # -- observability -----------------------------------------------------
+
+    def _record_forward(self, shape, dtype: str, method: str, plan,
+                        fuse_override: Optional[bool],
+                        jit_hit: bool) -> None:
+        report = self._build_report(shape, dtype, method, plan,
+                                    fuse_override, jit_hit)
+        self.last_report = report
+        telemetry.counter("engine.forwards").inc()
+        telemetry.counter(
+            "engine.jit_hits" if jit_hit else "engine.jit_misses").inc()
+        if report.fallback_count:
+            telemetry.counter("engine.fallback_ops").inc(
+                report.fallback_count)
+        report.emit_spans(telemetry.get_tracer())
+
+    def _build_report(self, shape, dtype: str, method: str, plan,
+                      fuse_override: Optional[bool],
+                      jit_hit: Optional[bool]) -> ExecutionReport:
+        batch = int(shape[0])
+        report = ExecutionReport(
+            method=method, batch=batch, in_shape=tuple(shape), dtype=dtype,
+            jit_cache_hit=jit_hit, plan_bound=self.plan is not None)
+        for op in self.program.conv_ops:
+            report.ops.append(self._op_report(op, method, plan,
+                                              fuse_override, batch=batch,
+                                              dtype=dtype))
+        return report
+
+    def _op_report(self, op: ConvOp, method: str, plan,
+                   fuse_override: Optional[bool], *, batch: int,
+                   dtype: str) -> OpReport:
+        """One conv op's OpReport: the dispatch decision (including the
+        kernels' own feasibility checks, via their ``resolve_*`` probes)
+        plus the roofline attribution of the *executed* schedule."""
+        # Lazy: repro.tuning imports this module's kernel deps.
+        from repro.tuning.measure import candidate_cost
+        from repro.tuning.planner import geometry_of_op
+        from repro.tuning.space import Candidate
+
+        entry = self.params[op.name]
+        d = self._plan_decision(op, method, plan, fuse_override)
+        g = geometry_of_op(op, batch=batch, dtype=dtype)
+        executed = "dense" if op.sparsity == 0 else d.method
+        reason = d.engine_reason
+        pad_to = d.pe.pad_to if d.pe is not None else None
+        fuse_res = d.fuse and op.res is not None
+        tiling: Dict[str, Any] = {}
+        if executed == "pallas":
+            ell = (entry.get("ell_auto", entry.get("ell")) if d.auto
+                   else entry.get("ell"))
+            k = ell.k if ell is not None else g.k_est(pad_to or 8)
+            sched, kreason = resolve_schedule(
+                op.m, op.c, op.e, op.f, k, op.k, op.k, op.stride, tm=d.tm,
+                te=d.te, tf=d.tf, fuse_res=fuse_res, pipeline=d.pipeline)
+            if sched is None:
+                reason, executed = kreason, "csr-direct"
+            else:
+                tm, te, tf, pipe = sched
+                tiling = {"tm": tm, "te": te, "tf": tf, "pipeline": pipe}
+        elif executed == "bsr":
+            bcc = self._bcsr_for(op, entry, d.block)
+            gbm, kb, bm, bn = bcc.blocks.shape
+            itemsize = 2 if dtype in ("bfloat16", "float16") else 4
+            sched, kreason = resolve_bsr_schedule(
+                op.c, op.e, op.f, op.k, op.k, op.stride, bm, bn, gbm, kb,
+                itemsize=itemsize, te=d.te, tf=d.tf, fuse_res=fuse_res)
+            if sched is None:
+                reason, executed = kreason, "dense"
+            else:
+                te, tf = sched
+                tiling = {"te": te, "tf": tf, "block_m": bm, "block_n": bn}
+        # Attribute cost at the schedule that actually runs — a fallback op
+        # is charged for its fallback path, not the method it asked for.
+        cand = Candidate(
+            method=executed, tm=tiling.get("tm"), pad_to=pad_to,
+            te=tiling.get("te"), tf=tiling.get("tf"),
+            fuse=d.fuse if executed in ("pallas", "bsr") else False,
+            pipeline=bool(tiling.get("pipeline", False)),
+            permute=d.permute if executed == "pallas" else False,
+            block_m=tiling.get("block_m"), block_n=tiling.get("block_n"))
+        w = entry.get("w") if executed == "bsr" else None
+        cost = candidate_cost(
+            g, cand, w_dense=None if w is None else np.asarray(w))
+        return OpReport(
+            name=op.name, method_planned=d.method_planned,
+            method_executed=executed, provenance=d.provenance,
+            plan_source=d.pe.source if d.pe is not None else "-",
+            fallback_reason=reason, fuse=d.fuse, tiling=tiling,
+            sparsity=op.sparsity, **cost)
+
+    def execution_report(self, x, method: str = "auto", *,
+                         fuse: Optional[bool] = None) -> ExecutionReport:
+        """The ExecutionReport a forward with these arguments would produce,
+        built without executing anything.
+
+        ``x`` is the input array or just its shape tuple — dispatch is
+        static Python over shapes and plan entries, so the report needs
+        neither data nor a compile.  ``jit_cache_hit`` reflects whether the
+        corresponding compiled function already exists.
+        """
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+        shape = tuple(x.shape) if hasattr(x, "shape") else tuple(x)
+        dtype = str(x.dtype) if hasattr(x, "dtype") else "float32"
+        plan = self.plan
+        if method == "auto" and plan is None:
+            plan = self._auto_plan(int(shape[0]))
+        key = (method, shape, dtype, fuse, id(plan))
+        return self._build_report(shape, dtype, method, plan, fuse,
+                                  jit_hit=key in self._fns)
+
+    def forward_timed(self, x: jax.Array, method: str = "auto", *,
+                      fuse: Optional[bool] = None) -> jax.Array:
+        """Opt-in timed mode: execute op-by-op with ``block_until_ready``
+        at every op boundary, recording real per-op wall spans on the
+        tracer's ``wall`` lane and (when available) wrapping each op in a
+        ``jax.profiler`` named scope so XLA profiles map back to layer
+        names.
+
+        The boundaries defeat whole-program fusion and force a host sync
+        per op, so this is a profiling tool, not a serving path — expect
+        it to be slower than ``engine(x, ...)``.  Calling it is the opt-in;
+        it records regardless of the global telemetry flag and leaves the
+        measured report on ``self.last_report`` (``wall_s`` filled for
+        every conv).
+        """
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+        plan = self.plan
+        if method == "auto" and plan is None:
+            plan = self._auto_plan(int(x.shape[0]))
+        report = self._build_report(tuple(x.shape), str(x.dtype), method,
+                                    plan, fuse, jit_hit=None)
+        report.timed = True
+        tracer = telemetry.get_tracer()
+        annotate = getattr(jax.profiler, "TraceAnnotation", None)
+        walls: Dict[str, float] = {}
+        vals: Dict[int, jax.Array] = {0: x}
+        for op in self.program.ops:
+            name = getattr(op, "name", None) or f"{type(op).__name__}:{op.out}"
+            scope = (annotate(name) if annotate is not None
+                     else contextlib.nullcontext())
+            t0 = time.perf_counter()
+            with scope:
+                vals[op.out] = self._exec_op(op, vals, method, plan, fuse)
+                jax.block_until_ready(vals[op.out])
+            dt = time.perf_counter() - t0
+            tracer.complete(name, start_s=t0, dur_s=dt, cat="op.timed",
+                            tid=telemetry.TID_WALL,
+                            args={"kind": type(op).__name__})
+            if isinstance(op, ConvOp):
+                walls[op.name] = dt
+        for o in report.ops:
+            o.wall_s = walls.get(o.name)
+        self.last_report = report
+        return vals[self.program.out]

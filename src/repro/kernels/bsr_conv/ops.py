@@ -27,6 +27,7 @@ from repro.kernels.bsr_conv.ref import bsr_conv_ref
 from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
                                            apply_epilogue, halo_extent,
                                            spatial_candidates)
+from repro.telemetry.fallback import record_fallback
 
 # The candidate (bm, bn) block shapes the autotuner enumerates: bn pinned to
 # the 128-lane MXU width, bm laddered — bigger bm amortises the per-block
@@ -77,11 +78,48 @@ def bsr_tile_candidates(c: int, e: int, f: int, r: int, s: int, stride: int,
     return sorted(out, key=pref)
 
 
+def resolve_bsr_schedule(c: int, e: int, f: int, r: int, s: int, stride: int,
+                         bm: int, bn: int, gbm: int, kb: int, *,
+                         itemsize: int = 4, te: Optional[int] = None,
+                         tf: Optional[int] = None, fuse_res: bool = False,
+                         ) -> Tuple[Optional[Tuple[int, int]],
+                                    Optional[str]]:
+    """The dispatch decision ``bsr_conv`` makes, as a pure function.
+
+    Returns ``((te, tf), None)`` for the spatial tiling the MXU kernel
+    would run, or ``(None, reason)`` — a ``telemetry.fallback`` reason
+    code — when the layer falls back to the dense-reconstruction conv.
+    The engine's ExecutionReport and the benchmark's zero-fallback
+    invariant probe dispatch through this; ``bsr_conv`` runs it too.
+    """
+    if not bsr_smem_fits(gbm, kb):
+        return None, "smem_infeasible"
+    if te is not None and tf is not None:
+        # Fully-specified tiling (tuned plan / caller override): honor it
+        # when it fits, never launch an over-budget kernel.
+        te, tf = min(te, e), min(tf, f)
+        if not bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
+                               itemsize=itemsize, fuse_res=fuse_res):
+            return None, "no_feasible_tiling"
+    else:
+        cands = bsr_tile_candidates(c, e, f, r, s, stride, bm, bn,
+                                    itemsize=itemsize, fuse_res=fuse_res)
+        if te is not None:
+            cands = [t for t in cands if t[0] == min(te, e)]
+        if tf is not None:
+            cands = [t for t in cands if t[1] == min(tf, f)]
+        if not cands:
+            return None, "no_feasible_tiling"
+        te, tf = cands[0]
+    return (te, tf), None
+
+
 def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
              padding: int = 0, te: Optional[int] = None,
              tf: Optional[int] = None, bias: Optional[jax.Array] = None,
              fuse_relu: bool = False, residual: Optional[jax.Array] = None,
-             interpret: bool = False) -> jax.Array:
+             interpret: bool = False,
+             layer: Optional[str] = None) -> jax.Array:
     """Block-sparse convolution + fused epilogue on the MXU.
 
     (N, C, H, W) input, BCSR filter bank for (M, C, R, S) weights ->
@@ -91,7 +129,9 @@ def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
     shape).  Falls back to the dense-reconstruction conv — with the
     identical epilogue applied unfused — when the block-column table busts
     SMEM or no spatial tiling fits VMEM, so ``bsr_conv`` is a complete
-    conv+epilogue operator either way.
+    conv+epilogue operator either way; any such fallback is reported
+    through ``telemetry.record_fallback`` (one-time warning + gated
+    counters), ``layer`` naming the conv op when the caller knows it.
     """
     m, c, r, s = bc.shape
     gbm, kb_dim, bm, bn = bc.blocks.shape
@@ -100,30 +140,22 @@ def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
     fuse_res = residual is not None
     itemsize = jnp.dtype(x.dtype).itemsize
 
-    def fallback() -> jax.Array:
+    def fallback(reason: str) -> jax.Array:
+        record_fallback(
+            "bsr_conv", reason, layer=layer,
+            geometry=(f"m={m} c={c} e={e} f={f} bm={bm} bn={bn} gbm={gbm} "
+                      f"kb={kb_dim} r={r} s={s} stride={stride}"),
+            fallback_to="dense")
         y = bsr_conv_ref(x, bcsr_conv_to_dense(bc), stride=stride,
                          padding=padding).astype(x.dtype)
         return apply_epilogue(y, bias, fuse_relu, residual)
 
-    if not bsr_smem_fits(gbm, kb_dim):
-        return fallback()
-    if te is not None and tf is not None:
-        # Fully-specified tiling (tuned plan / caller override): honor it
-        # when it fits, never launch an over-budget kernel.
-        te, tf = min(te, e), min(tf, f)
-        if not bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
-                               itemsize=itemsize, fuse_res=fuse_res):
-            return fallback()
-    else:
-        cands = bsr_tile_candidates(c, e, f, r, s, stride, bm, bn,
-                                    itemsize=itemsize, fuse_res=fuse_res)
-        if te is not None:
-            cands = [t for t in cands if t[0] == min(te, e)]
-        if tf is not None:
-            cands = [t for t in cands if t[1] == min(tf, f)]
-        if not cands:
-            return fallback()
-        te, tf = cands[0]
+    sched, reason = resolve_bsr_schedule(c, e, f, r, s, stride, bm, bn,
+                                         gbm, kb_dim, itemsize=itemsize,
+                                         te=te, tf=tf, fuse_res=fuse_res)
+    if sched is None:
+        return fallback(reason)
+    te, tf = sched
     xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
     # Channel padding: the kernel computes gbm*bm output channels; bias and
     # residual are padded to match, the result sliced back to M.

@@ -33,6 +33,7 @@ from repro.core.direct_conv import direct_sparse_conv, out_spatial
 from repro.core.sparse_format import (EllConv, ell_from_dense_conv,
                                       inverse_permutation)
 from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
+from repro.telemetry.fallback import record_fallback
 
 # VMEM budget the autotuner packs blocks into (bytes).  v5e has ~16 MiB of
 # VMEM per core; leave headroom for Mosaic's own buffers and semaphores.
@@ -195,13 +196,67 @@ def apply_epilogue(y: jax.Array, bias: Optional[jax.Array],
     return y.astype(dtype)
 
 
+def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                     stride: int, *, tm: Optional[int] = None,
+                     te: Optional[int] = None, tf: Optional[int] = None,
+                     fuse_res: bool = False,
+                     pipeline: Optional[bool] = None,
+                     ) -> Tuple[Optional[Tuple[int, int, int, bool]],
+                                Optional[str]]:
+    """The dispatch decision ``sparse_conv`` makes, as a pure function.
+
+    Returns ``((tm, te, tf, pipeline), None)`` for the schedule the Pallas
+    kernel would run, or ``(None, reason)`` — a ``telemetry.fallback``
+    reason code — when the layer falls back to the pure-JAX direct path.
+    Factored out so the engine's ExecutionReport and the benchmark's
+    zero-fallback invariant can ask "what would this layer execute?"
+    without launching anything; ``sparse_conv`` itself dispatches through
+    this same function.
+    """
+    if not smem_fits(m, k):
+        # Index-heavy layers: packed indices cannot be scalar-prefetched.
+        return None, "smem_infeasible"
+    if tm is not None and te is not None and tf is not None:
+        # Fully-specified tiling (tuned plan / caller override): honor it
+        # when it fits, never launch an over-budget kernel.
+        te, tf = min(te, e), min(tf, f)
+        if tm < 1 or m % tm:
+            return None, "nondividing_tm"
+        if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                           fuse_res=fuse_res):
+            return None, "no_feasible_tiling"
+    else:
+        # A pinned tm need not sit on the default ladder (e.g. tm=24 for
+        # m=48): enumerate spatial tiles for exactly that tm.
+        if tm is not None and (tm < 1 or m % tm):
+            return None, "nondividing_tm"
+        cands = tile_candidates(m, c, e, f, k, r, s, stride,
+                                tms=None if tm is None else (tm,),
+                                fuse_res=fuse_res)
+        if te is not None:
+            cands = [t for t in cands if t[1] == min(te, e)]
+        if tf is not None:
+            cands = [t for t in cands if t[2] == min(tf, f)]
+        if not cands:
+            # No in-budget tiling (or the requested one is infeasible).
+            return None, "no_feasible_tiling"
+        tm, te, tf = cands[0]
+    # Halo DMA schedule: double-buffer when allowed *and* the second halo
+    # scratch block fits; otherwise the single-buffer blocking path.
+    if pipeline is None or pipeline:
+        pipeline = tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                               fuse_res=fuse_res, pipeline=True)
+    return (tm, te, tf, bool(pipeline)), None
+
+
 def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
                 padding: int = 0, tm: Optional[int] = None,
                 te: Optional[int] = None, tf: Optional[int] = None,
                 bias: Optional[jax.Array] = None, fuse_relu: bool = False,
                 residual: Optional[jax.Array] = None,
                 pipeline: Optional[bool] = None,
-                interpret: bool = False) -> jax.Array:
+                interpret: bool = False,
+                layer: Optional[str] = None) -> jax.Array:
     """Direct sparse convolution + fused epilogue, Pallas-accelerated.
 
     (N, C, H, W) input, ELL filter bank for (M, C, R, S) weights ->
@@ -227,13 +282,24 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
     bit-identical to the natural-order bank (per-row accumulation order is
     untouched).  Falls back to the pure-JAX direct path — with the
     identical epilogue applied unfused — only when the packed index array
-    busts the SMEM budget or no VMEM-feasible tiling exists.
+    busts the SMEM budget or no VMEM-feasible tiling exists; any such
+    fallback is reported through ``telemetry.record_fallback`` (one-time
+    warning + gated counters), ``layer`` naming the conv op when the
+    caller knows it.
     """
     m, c, r, s = ell.shape
     k = ell.k
     inv = inverse_permutation(ell.perm) if ell.perm is not None else None
+    n, _, h, w = x.shape
+    e, f = out_spatial(h, w, r, s, stride, padding)
+    fuse_res = residual is not None
 
-    def fallback() -> jax.Array:
+    def fallback(reason: str) -> jax.Array:
+        record_fallback(
+            "sparse_conv", reason, layer=layer,
+            geometry=(f"m={m} c={c} e={e} f={f} k={k} r={r} s={s} "
+                      f"stride={stride}"),
+            fallback_to="csr-direct")
         y = direct_sparse_conv(x, ell, stride=stride, padding=padding)
         if inv is not None:
             # The bank's rows are in balanced order; restore channel order
@@ -241,39 +307,13 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
             y = jnp.take(y, inv, axis=1)
         return apply_epilogue(y, bias, fuse_relu, residual)
 
-    if not smem_fits(m, k):
-        # Index-heavy layers: packed indices cannot be scalar-prefetched.
-        return fallback()
-    n, _, h, w = x.shape
-    e, f = out_spatial(h, w, r, s, stride, padding)
-    fuse_res = residual is not None
-    if tm is not None and te is not None and tf is not None:
-        # Fully-specified tiling (tuned plan / caller override): honor it
-        # when it fits, never launch an over-budget kernel.
-        te, tf = min(te, e), min(tf, f)
-        if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                           fuse_res=fuse_res):
-            return fallback()
-    else:
-        # A pinned tm need not sit on the default ladder (e.g. tm=24 for
-        # m=48): enumerate spatial tiles for exactly that tm.
-        cands = tile_candidates(m, c, e, f, k, r, s, stride,
-                                tms=None if tm is None else (tm,),
-                                fuse_res=fuse_res)
-        if te is not None:
-            cands = [t for t in cands if t[1] == min(te, e)]
-        if tf is not None:
-            cands = [t for t in cands if t[2] == min(tf, f)]
-        if not cands:
-            # No in-budget tiling (or the requested one is infeasible): use
-            # the XLA-scheduled direct path.
-            return fallback()
-        tm, te, tf = cands[0]
-    # Halo DMA schedule: double-buffer when allowed *and* the second halo
-    # scratch block fits; otherwise the single-buffer blocking path.
-    if pipeline is None or pipeline:
-        pipeline = tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                               fuse_res=fuse_res, pipeline=True)
+    sched, reason = resolve_schedule(m, c, e, f, k, r, s, stride, tm=tm,
+                                     te=te, tf=tf, fuse_res=fuse_res,
+                                     pipeline=pipeline)
+    if sched is None:
+        # The XLA-scheduled direct path, with the same epilogue unfused.
+        return fallback(reason)
+    tm, te, tf, pipeline = sched
     xpad = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
     b = (jnp.zeros((m,), jnp.float32) if bias is None
          else jnp.asarray(bias, jnp.float32))

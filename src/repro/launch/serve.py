@@ -17,6 +17,7 @@ check on a reduced layer slice.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as cfgs
+from repro import telemetry
 from repro.core.pruning import block_prune
 from repro.core.sparse_format import bcsr_from_dense, bcsr_stack_from_dense
 from repro.launch.steps import make_serve_step
@@ -122,11 +124,31 @@ def autotune_main(args) -> None:
     apply_plan_to_params(sparams, splan)
     engine = CnnEngine(slice_prog, sparams, splan)
     y_auto = engine(x, "auto")
+    # Capture the auto forward's report before the dense oracle forward
+    # overwrites last_report with its own.
+    report = engine.last_report if telemetry.is_enabled() else None
     y_dense = engine(x, "dense")
     np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_dense),
                                rtol=1e-4, atol=1e-4)
     methods = sorted({pe.method for pe in splan.values()})
     print(f"auto-vs-dense slice check ok (slice methods: {', '.join(methods)})")
+
+    if report is not None:
+        # The auto forward above recorded its per-op ExecutionReport at
+        # dispatch time; surface it (and fail loudly on silent fallbacks).
+        print(report.format())
+        assert report.fallback_count == 0, (
+            f"traced forward took {report.fallback_count} silent "
+            f"fallback(s): {[o.fallback_reason for o in report.fallback_ops]}")
+
+
+def export_trace(path: str) -> None:
+    """Validate + write the global tracer's Chrome-trace JSON and a metrics
+    summary — what ``--trace out.json`` produces."""
+    tracer = telemetry.get_tracer()
+    tracer.export(path)
+    print(f"exported {len(tracer)} trace events -> {path} "
+          f"({len(telemetry.snapshot())} metrics recorded)")
 
 
 def main() -> None:
@@ -145,10 +167,18 @@ def main() -> None:
     ap.add_argument("--plan-cache", default="plans/autotune_cache.json")
     ap.add_argument("--tune-mode", default="roofline",
                     choices=("roofline", "wall"))
+    ap.add_argument("--trace", metavar="OUT_JSON",
+                    help="enable telemetry and export a Chrome-trace JSON "
+                         "(chrome://tracing / Perfetto) on exit")
     args = ap.parse_args()
+
+    if args.trace:
+        telemetry.enable()
 
     if args.autotune:
         autotune_main(args)
+        if args.trace:
+            export_trace(args.trace)
         return
     if not args.arch:
         ap.error("--arch is required unless --autotune is given")
@@ -168,20 +198,29 @@ def main() -> None:
     cache = T.init_cache(cfg, b, max_len)
     serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
 
+    def span(name, **kw):
+        if telemetry.is_enabled():
+            return telemetry.get_tracer().span(name, cat="serve", **kw)
+        return contextlib.nullcontext()
+
     # prefill token-by-token (smoke-scale; production uses the prefill step)
     t0 = time.time()
     tok = prompts[:, :1]
-    for i in range(p):
-        nxt, cache = serve_step(params, prompts[:, i:i + 1], cache,
-                                jnp.int32(i))
+    with span("prefill", tokens=p, batch=b):
+        for i in range(p):
+            nxt, cache = serve_step(params, prompts[:, i:i + 1], cache,
+                                    jnp.int32(i))
+        jax.block_until_ready(nxt)
     t_prefill = time.time() - t0
 
     out = [nxt]
     t0 = time.time()
-    for i in range(p, p + g - 1):
-        nxt, cache = serve_step(params, out[-1][:, None], cache, jnp.int32(i))
-        out.append(nxt)
-    jax.block_until_ready(out[-1])
+    with span("decode", tokens=g - 1, batch=b):
+        for i in range(p, p + g - 1):
+            nxt, cache = serve_step(params, out[-1][:, None], cache,
+                                    jnp.int32(i))
+            out.append(nxt)
+        jax.block_until_ready(out[-1])
     t_decode = time.time() - t0
     gen = np.stack([np.asarray(t) for t in out], axis=1)
     assert gen.shape == (b, g), gen.shape
@@ -189,6 +228,8 @@ def main() -> None:
     print(f"generated {g} tokens x {b} seqs; prefill {t_prefill:.2f}s, "
           f"decode {t_decode:.2f}s ({t_decode / max(g - 1, 1) * 1e3:.1f} ms/tok)")
     print("sample:", gen[0, :12].tolist())
+    if args.trace:
+        export_trace(args.trace)
 
 
 if __name__ == "__main__":

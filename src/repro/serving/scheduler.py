@@ -23,11 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import telemetry
 
 
 @dataclasses.dataclass
@@ -85,6 +88,8 @@ class ContinuousBatcher:
                     self.queue.pop(0)
                     req.done = True  # reject oversize; surfaced to caller
                     self.rejected.append(req)
+                    if telemetry.is_enabled():
+                        telemetry.counter("serving.rejections").inc()
                     continue
                 if len(req.prompt) + req.max_new_tokens > budget:
                     break  # not enough cache left this wave: wait, don't drop
@@ -93,6 +98,8 @@ class ContinuousBatcher:
                 slot.pos = 0
                 slot.prompt_cursor = 0
                 admitted += 1
+        if admitted and telemetry.is_enabled():
+            telemetry.counter("serving.admissions").inc(admitted)
         return admitted
 
     def retire(self) -> List[Request]:
@@ -109,6 +116,8 @@ class ContinuousBatcher:
                 req.done = True
                 out.append(req)
                 slot.request = None
+        if out and telemetry.is_enabled():
+            telemetry.counter("serving.retirements").inc(len(out))
         return out
 
     @property
@@ -153,7 +162,15 @@ class ServeEngine:
         return toks
 
     def tick(self) -> None:
+        telem = telemetry.is_enabled()
+        t0 = time.perf_counter() if telem else 0.0
         self.batcher.admit(budget=self.max_len - self._cursor)
+        if telem:
+            # Levels are recorded even for idle ticks (before the early
+            # return) so the gauges reflect drained batches too.
+            telemetry.gauge("serving.queue_depth").set(
+                len(self.batcher.queue))
+            telemetry.gauge("serving.active_slots").set(self.batcher.active)
         if self.batcher.active == 0:
             return
         toks = self._feed_tokens()
@@ -182,6 +199,11 @@ class ServeEngine:
         if self.batcher.active == 0:
             self._cursor = 0  # batch drained: next wave reuses the cache
         self._tick += 1
+        if telem:
+            # Latency of working ticks only — idle ticks return above and
+            # would drown the distribution in no-op times.
+            telemetry.histogram("serving.tick_latency_s").observe(
+                time.perf_counter() - t0)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         finished: List[Request] = []

@@ -1,0 +1,82 @@
+"""Machine-readable fallback reason codes + the always-on one-time warning.
+
+Every silent-degradation branch in the execution stack reports through
+:func:`record_fallback` with a reason code from :data:`REASONS`:
+
+  smem_infeasible       the kernel's scalar-prefetched operands (packed ELL
+                        indices / BCSR block-column table) bust the SMEM
+                        budget — the layer can never run this kernel
+  no_feasible_tiling    no VMEM-feasible output tiling exists (or the
+                        plan-pinned tiling busts the budget at this
+                        geometry)
+  nondividing_tm        a pinned output-channel tile does not divide M
+                        (typically a stale plan applied to a resized layer)
+  stale_plan_no_block   a plan entry claims ``method="bsr"`` but carries no
+                        BCSR block shape (pre-v5 cache document) — the
+                        engine runs the dense executor instead
+
+Two consumers, with different lifetimes:
+
+  * a **one-time ``warnings.warn``** (:class:`SparseFallbackWarning`, keyed
+    per (kernel, layer-or-geometry, reason)) that fires regardless of
+    whether telemetry is enabled — a mis-tuned or stale plan silently
+    running the dense-reconstruction path must leave *some* signal;
+  * **metrics counters** (``fallback.<kernel>.<reason>`` plus the roll-up
+    ``fallback.total``), recorded only when telemetry is enabled.
+
+Callers sit at trace/dispatch time (the feasibility checks are static
+Python over shapes), so recording here never puts a host callback inside a
+compiled program.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Set, Tuple
+
+REASONS = frozenset({
+    "smem_infeasible",
+    "no_feasible_tiling",
+    "nondividing_tm",
+    "stale_plan_no_block",
+})
+
+
+class SparseFallbackWarning(UserWarning):
+    """A sparse conv kernel silently took a fallback execution path."""
+
+
+# (kernel, layer-or-geometry, reason) triples already warned about.
+_WARNED: Set[Tuple[str, str, str]] = set()
+
+
+def record_fallback(kernel: str, reason: str, *, layer: Optional[str] = None,
+                    geometry: str = "", fallback_to: str = "") -> None:
+    """Report one fallback decision: warn once per (layer, reason), and
+    count it when telemetry is enabled.
+
+    ``kernel`` names the reporting site (``sparse_conv`` / ``bsr_conv`` /
+    ``engine``); ``layer`` the conv layer when the caller knows it (the
+    geometry string keys the warning otherwise); ``fallback_to`` the path
+    actually executed (``csr-direct``, ``dense``, ...).
+    """
+    if reason not in REASONS:
+        raise ValueError(f"unknown fallback reason {reason!r}; "
+                         f"one of {sorted(REASONS)}")
+    key = (kernel, layer or geometry, reason)
+    if key not in _WARNED:
+        _WARNED.add(key)
+        where = f"layer {layer!r}" if layer else "layer"
+        tail = f" -> {fallback_to}" if fallback_to else ""
+        warnings.warn(
+            f"{kernel}: {where} ({geometry}) fell back{tail}: {reason}",
+            SparseFallbackWarning, stacklevel=2)
+    from repro import telemetry  # local: telemetry imports this module
+    if telemetry.is_enabled():
+        from repro.telemetry import metrics
+        metrics.counter(f"fallback.{kernel}.{reason}").inc()
+        metrics.counter("fallback.total").inc()
+
+
+def reset_warnings() -> None:
+    """Forget which (kernel, layer, reason) triples already warned (tests)."""
+    _WARNED.clear()

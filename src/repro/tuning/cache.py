@@ -64,6 +64,13 @@ class PlanEntry:
     block_n: Optional[int] = None
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
+    # Where this entry came from *this run* — freshly_tuned | cache_hit |
+    # migrated | default (see ExecutionReport).  Ephemeral bookkeeping for
+    # telemetry: excluded from equality (a reloaded plan must still compare
+    # equal to the freshly-tuned one that produced it) and from to_dict()
+    # (the on-disk schema is unchanged).
+    provenance: str = dataclasses.field(default="freshly_tuned",
+                                        compare=False, repr=False)
 
     @property
     def candidate(self) -> Candidate:
@@ -144,8 +151,19 @@ class PlanCache:
         # epilogue), absent pipeline/permute to False (blocking DMA,
         # natural row order), and absent block_m/block_n to None (no BCSR
         # shape).  save() re-persists as the current version.
-        self.entries = {k: PlanEntry.from_dict(v)
-                        for k, v in doc.get("entries", {}).items()}
+        provenance = "cache_hit" if version == CACHE_VERSION else "migrated"
+        self.entries = {
+            k: dataclasses.replace(PlanEntry.from_dict(v),
+                                   provenance=provenance)
+            for k, v in doc.get("entries", {}).items()}
+        from repro import telemetry  # local: keep module deps one-way
+        if telemetry.is_enabled():
+            telemetry.counter("tuning.cache.loads").inc()
+            telemetry.counter("tuning.cache.loaded_entries").inc(
+                len(self.entries))
+            if version != CACHE_VERSION:
+                telemetry.counter("tuning.cache.load_migrations").inc(
+                    len(self.entries))
         return self
 
     def save(self, path: Optional[str] = None) -> str:

@@ -33,8 +33,42 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS, VPU_FLOPS
 from repro.tuning.space import Candidate, ConvGeometry
 
 
-def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (seconds) of a jitted call."""
+class TimingStats(float):
+    """Median wall seconds with the (min, max) spread riding along.
+
+    A ``float`` subclass whose value *is* the p50, so every existing
+    caller's arithmetic (``t * 1e3``, comparisons, sorting) keeps working
+    unchanged, while ``.min`` / ``.max`` expose the measurement spread —
+    a wide spread means the median was lucky, not representative.
+    """
+
+    __slots__ = ("min", "max")
+
+    def __new__(cls, p50: float, tmin: Optional[float] = None,
+                tmax: Optional[float] = None) -> "TimingStats":
+        self = super().__new__(cls, p50)
+        self.min = float(p50 if tmin is None else tmin)
+        self.max = float(p50 if tmax is None else tmax)
+        return self
+
+    @property
+    def p50(self) -> float:
+        return float(self)
+
+    @property
+    def spread(self) -> float:
+        return self.max - self.min
+
+    def __repr__(self) -> str:
+        return (f"TimingStats(p50={float(self):.3e}, min={self.min:.3e}, "
+                f"max={self.max:.3e})")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2,
+            iters: int = 5) -> TimingStats:
+    """(min, p50, max) wall time of a jitted call, as a :class:`TimingStats`
+    (a float equal to the median, so callers doing arithmetic are
+    unaffected; the spread makes noisy measurements visible)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -43,7 +77,7 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return TimingStats(times[len(times) // 2], times[0], times[-1])
 
 
 # ---------------------------------------------------------------------------
@@ -312,6 +346,64 @@ def roofline_estimate(g: ConvGeometry, cand: Candidate,
     raise ValueError(cand.method)
 
 
+def candidate_cost(g: ConvGeometry, cand: Candidate,
+                   w_dense: Optional[np.ndarray] = None,
+                   bsr_kept: Optional[float] = None) -> dict:
+    """Roofline attribution for one candidate: the flop count, total HBM
+    bytes, staging-stall seconds, and the :func:`roofline_estimate` bound,
+    as one dict — what the engine's ExecutionReport charges each op.
+
+    The flop/byte terms are exactly the ones :func:`roofline_estimate`
+    prices (per-method execution-unit split and all); this just returns
+    them instead of collapsing to the max.  ``staging_stall_s`` is nonzero
+    only for the halo-staging kernels (pallas / bsr).
+    """
+    n, m, c = g.batch, g.m, g.c
+    rs = g.r * g.s
+    e, f = g.e, g.f
+    itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    din = float(n * c * g.hp * g.wp * itemsize)
+    dout = float(n * m * e * f * 4)
+    ep_unfused = epilogue_bytes(g, fused=False)
+    est_s = roofline_estimate(g, cand, w_dense=w_dense, bsr_kept=bsr_kept)
+    stall = (staging_stall_s(g, cand)
+             if cand.method in ("pallas", "bsr") else 0.0)
+    if cand.method == "dense":
+        flops = 2.0 * n * m * c * rs * e * f
+        hbm = din + dout + itemsize * m * c * rs + ep_unfused
+    elif cand.method == "bsr":
+        bm, bn = cand.block_m or 8, cand.block_n or 128
+        gbm, _, kept = g.bsr_grid(bm, bn)
+        if bsr_kept is not None:
+            kept = bsr_kept
+        elif w_dense is not None:
+            kept = bcsr_true_kept(w_dense, bm, bn)
+        flops = 2.0 * n * gbm * kept * bm * bn * e * f
+        hbm = (staged_input_bytes(g, cand) + dout
+               + float(gbm * kept * bm * bn * itemsize)
+               + epilogue_bytes(g, fused=cand.fuse))
+    elif cand.method == "pallas":
+        flops = 2.0 * n * m * g.row_nnz_est * e * f
+        k_pad = g.k_est(cand.pad_to or 8)
+        hbm = (staged_input_bytes(g, cand) + dout
+               + float(m * k_pad * (itemsize + 4))
+               + epilogue_bytes(g, fused=cand.fuse)
+               + permute_bytes(g, cand.permute))
+    elif cand.method in ("lowered", "csr-direct"):
+        k_pad = g.k_est(cand.pad_to or 8)
+        flops = 2.0 * n * m * k_pad * e * f
+        ell_bytes = float(m * k_pad * (itemsize + 4))
+        if cand.method == "lowered":
+            im2col = float(n * c * rs * e * f * itemsize)
+            hbm = 2 * im2col + dout + ell_bytes + ep_unfused
+        else:
+            hbm = din + dout + ell_bytes + ep_unfused
+    else:
+        raise ValueError(cand.method)
+    return {"flops": float(flops), "hbm_bytes": float(hbm),
+            "staging_stall_s": float(stall), "est_s": float(est_s)}
+
+
 # ---------------------------------------------------------------------------
 # wall-clock scoring
 # ---------------------------------------------------------------------------
@@ -389,8 +481,8 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
 
 def measure_candidate(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
                       x: jax.Array, *, warmup: int = 1, iters: int = 5,
-                      interpret: bool = True) -> float:
-    """Median wall seconds for one candidate on real arrays."""
+                      interpret: bool = True) -> TimingStats:
+    """Median wall seconds (+ spread) for one candidate on real arrays."""
     runner, extra = build_runner(g, cand, w_dense, interpret=interpret)
     if extra:  # dense path: (x, w)
         return time_fn(runner, x, *extra, warmup=warmup, iters=iters)

@@ -16,12 +16,15 @@ reuses the measurement of a plain conv+ReLU with the same shape.
 """
 from __future__ import annotations
 
+import dataclasses
+import logging
 from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.sparse_format import (bcsr_conv_from_dense, ell_from_dense,
                                       ell_from_dense_conv)
 from repro.engine import ConvOp, Program, lower, spec
@@ -29,6 +32,8 @@ from repro.tuning.cache import PlanCache, PlanEntry, layer_key
 from repro.tuning.measure import (bcsr_true_kept, measurable,
                                   measure_candidate, roofline_estimate)
 from repro.tuning.space import ConvGeometry, enumerate_candidates
+
+_LOG = logging.getLogger("repro.tuning")
 
 
 def geometry_for(layer: "spec.Conv", c: int, h: int, w: int, *, batch: int = 1,
@@ -73,7 +78,8 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
     if mode == "wall":
         cands = [cd for cd in cands if measurable(cd, backend)]
     if not cands:
-        return PlanEntry(method="dense", source="heuristic")
+        return PlanEntry(method="dense", source="heuristic",
+                         provenance="default")
     best, best_t = None, float("inf")
     rng = np.random.default_rng(0)
     x = None
@@ -87,6 +93,11 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
         if mode == "wall":
             t = measure_candidate(g, cd, w_dense, x, warmup=warmup,
                                   iters=iters, interpret=interpret)
+            # time_fn returns TimingStats: surface the (min, p50, max)
+            # spread so a lucky median is visible in the tuning log.
+            _LOG.debug(
+                "wall %s %s: p50=%.1fus min=%.1fus max=%.1fus", g.name,
+                cd, t * 1e6, t.min * 1e6, t.max * 1e6)
         elif cd.method == "bsr" and w_dense is not None:
             # One bank scan per block shape, not per candidate — the
             # ladder has ~4 shapes but ~dozens of (te, tf, fuse) points.
@@ -98,6 +109,12 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
             t = roofline_estimate(g, cd)
         if t < best_t:
             best, best_t = cd, t
+    if mode == "wall":
+        _LOG.info(
+            "wall winner %s %s: p50=%.1fus spread=[%.1fus, %.1fus]",
+            g.name, best.method, best_t * 1e6,
+            getattr(best_t, "min", best_t) * 1e6,
+            getattr(best_t, "max", best_t) * 1e6)
     return PlanEntry(method=best.method, tm=best.tm, pad_to=best.pad_to,
                      te=best.te, tf=best.tf, fuse=best.fuse,
                      pipeline=best.pipeline, permute=best.permute,
@@ -161,7 +178,11 @@ def plan_program(program: Program, *, batch: int = 1,
             # block-pruned model's bsr plan is never inherited by an
             # unstructured bank of identical geometry.
             key += "_" + weight_structure_tag(w_dense)
+        telem = telemetry.is_enabled()
         entry = cache.get(key) if cache is not None else None
+        if entry is not None and telem:
+            # Entries arrive from load() already marked cache_hit/migrated.
+            telemetry.counter(f"tuning.plan.{entry.provenance}").inc()
         if entry is None and cache is not None and key != base_key:
             # Legacy compatibility: pre-tag caches (v1-v4 migrations, or
             # weight-free v5 runs) keyed without the structure tag.  Only
@@ -170,13 +191,22 @@ def plan_program(program: Program, *, batch: int = 1,
             # may have been priced for a different bank structure.
             legacy = cache.get(base_key)
             if legacy is not None and legacy.method != "bsr":
-                entry = legacy
+                entry = dataclasses.replace(legacy, provenance="migrated")
+                if telem:
+                    telemetry.counter("tuning.plan.legacy_inherit").inc()
+            elif legacy is not None and telem:
+                # A legacy bsr winner exists but cannot be trusted for this
+                # bank structure — the layer re-scores below.
+                telemetry.counter("tuning.plan.bsr_structure_rescore").inc()
         if entry is None:
             entry = scored.get(key)
+            if entry is not None and telem:
+                telemetry.counter("tuning.plan.dedup_hit").inc()
         if entry is None:
             if op.sparsity <= 0:
                 # Dense-kept layer: one candidate, nothing to measure.
-                entry = PlanEntry(method="dense", source="heuristic")
+                entry = PlanEntry(method="dense", source="heuristic",
+                                  provenance="default")
             else:
                 if mode == "wall" and w_dense is None:
                     raise ValueError(
@@ -186,6 +216,8 @@ def plan_program(program: Program, *, batch: int = 1,
                                    warmup=warmup, iters=iters)
             misses += 1
             scored[key] = entry
+            if telem:
+                telemetry.counter("tuning.plan.scored").inc()
             if cache is not None:
                 cache.put(key, entry)
         plan[op.name] = entry

@@ -131,6 +131,39 @@ def test_engine_deterministic_per_request():
     assert r_a.output == r_solo.output
 
 
+def test_serving_telemetry_metrics():
+    """A drained run under telemetry records admissions/rejections/
+    retirements counters, queue/slot gauges, and a working-tick latency
+    histogram with ordered quantiles; disabled runs record nothing."""
+    from repro import telemetry
+
+    telemetry.reset()
+    eng_off = _engine(n_slots=2, max_len=16)
+    eng_off.submit(Request(0, [1, 2], max_new_tokens=2))
+    eng_off.run_until_drained()
+    assert telemetry.snapshot() == {}  # disabled: zero recording
+
+    with telemetry.enabled():
+        eng = _engine(n_slots=2, max_len=16)
+        reqs = [Request(i, [1 + i, 2], max_new_tokens=3) for i in range(4)]
+        oversize = Request(9, list(range(12)), max_new_tokens=8)
+        for r in reqs:
+            eng.submit(r)
+        eng.submit(oversize)
+        eng.run_until_drained()
+
+        snap = telemetry.snapshot()
+        assert snap["serving.admissions"]["value"] == 4
+        assert snap["serving.rejections"]["value"] == 1
+        assert snap["serving.retirements"]["value"] == 4
+        assert snap["serving.queue_depth"]["value"] == 0  # drained
+        assert snap["serving.active_slots"]["value"] == 0
+        hist = telemetry.histogram("serving.tick_latency_s")
+        assert hist.count > 0
+        assert 0 < hist.min <= hist.p50 <= hist.p95 <= hist.p99 <= hist.max
+    telemetry.reset()
+
+
 def test_sparsify_params_converts_list_and_root_leaves():
     """Regression: ``sparsify_params.visit`` only ran ``conv`` on
     dict-valued parents, so leaves held in lists (and a bare pytree root)
