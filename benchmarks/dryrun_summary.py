@@ -69,9 +69,10 @@ def smoke() -> None:
     _smoke_bench_json(bench_sparse_conv)
     _smoke_cache_migrations()
     _smoke_traced_forward()
+    _smoke_static_verifier()
     print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
           "bench json pipeline + bsr rows + zero fallbacks, cache v1-v4 -> "
-          "v5 migrations, traced forward valid")
+          "v5 migrations, traced forward valid, static verifier clean")
 
 
 def _smoke_bench_json(bench_sparse_conv) -> None:
@@ -202,6 +203,25 @@ def _smoke_traced_forward() -> None:
             if not any(ev.get("ph") == "X" for ev in doc["traceEvents"]):
                 raise SystemExit("trace smoke: no complete (X) span events")
     telemetry.reset()
+
+
+def _smoke_static_verifier() -> None:
+    """The pre-flight verifier must report zero errors over every network,
+    its shipped default plan, and the kernel sources — the same gate CI's
+    static-analysis job runs via `python -m repro.analysis check`."""
+    from repro.analysis.checker import run_check
+
+    report = run_check()
+    if report.errors:
+        raise SystemExit(
+            "static-verifier smoke: "
+            + "; ".join(d.format() for d in report.errors))
+    if report.warnings:
+        raise SystemExit(
+            "static-verifier smoke: unexpected warnings: "
+            + "; ".join(d.format() for d in report.warnings))
+    if not report.checked:
+        raise SystemExit("static-verifier smoke: nothing was checked")
 
 
 def main() -> None:

@@ -20,7 +20,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row
 from benchmarks.fig8_sparse_conv import SCALES
 from repro.engine import lower
 from repro.models import cnn

@@ -1,0 +1,35 @@
+"""Pre-flight static verifier: find serving-time surprises before deploy.
+
+Four rule packs over four layers of the stack, one diagnostic vocabulary:
+
+  schedule_rules  drive the kernels' pure dispatch probes over every conv a
+                  net can run: SMEM/VMEM budgets (incl. the pipeline's
+                  second halo buffer), tiling divisibility, halo bounds,
+                  the dtype policy
+  plan_rules      audit a plan-cache file without executing: schema and
+                  migration chain, stale pre-v5 bsr entries, key grammar,
+                  geometry consistency, structure tags
+  program_rules   structural checks on the lowered op program: SSA form,
+                  geometry chaining, epilogue signatures
+  ast_lints       parse the kernel sources: no host branching on traced
+                  values, no allocation in the grid loop, f32 accumulators,
+                  DMA start/wait pairing
+
+``python -m repro.analysis check`` runs everything (docs:
+``docs/static_analysis.md``); ``CnnEngine(..., strict=True)`` runs the
+bind-scoped subset and raises :class:`PreflightError` on errors.
+"""
+
+from repro.analysis.diagnostics import (
+    REASON_RULES,
+    Diagnostic,
+    PreflightError,
+    Report,
+)
+
+__all__ = [
+    "Diagnostic",
+    "PreflightError",
+    "REASON_RULES",
+    "Report",
+]

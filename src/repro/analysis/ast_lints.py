@@ -1,0 +1,291 @@
+"""AST lints over kernel sources: TPU-kernel hygiene, statically.
+
+Parses the Pallas kernel modules (no import, no trace) and checks the
+kernel bodies — top-level functions taking at least one ``*_ref``
+parameter — for the classes of bug that trace cleanly on CPU interpret
+mode but miscompile, stall, or silently mis-execute on the accelerator:
+
+  lint.traced_branch  host-side ``if``/``while`` on a traced value
+                      (``pl.program_id``/``pl.num_programs`` results, ref
+                      loads, and anything derived from them).  Python
+                      branches evaluate at trace time; branching on a
+                      traced value either crashes late (ConcretizationError
+                      on TPU) or silently bakes in one path.  Static
+                      Python parameters (``if pipeline:``) are fine and
+                      not flagged; ``jnp.where``/``pl.when``/ternary
+                      expressions are the sanctioned forms.
+  lint.grid_alloc     ``jnp.zeros``/``ones``/``full``/``empty`` inside the
+                      innermost ``fori_loop`` body — a fresh allocation
+                      per grid step defeats accumulator registerisation
+                      (allocate outside, carry through the loop).
+  lint.accum_dtype    an accumulator-style allocation (``jnp.zeros`` /
+                      ``ones``/``full``) without an explicit f32 dtype —
+                      the repo-wide policy is bf16/f16 inputs, float32
+                      accumulate (``zeros_like``/``full_like`` inherit a
+                      checked dtype and are exempt).
+  lint.dma_pairing    a kernel body issuing async-copy ``.start()`` with
+                      no matching ``.wait()`` (or vice versa) — an
+                      unwaited DMA is a race on the destination buffer; a
+                      wait with no start deadlocks.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from repro.analysis.diagnostics import Diagnostic
+
+RULES = {
+    "lint.traced_branch": (
+        "error",
+        "host-side if/while on a traced value in a kernel body",
+    ),
+    "lint.grid_alloc": (
+        "error",
+        "array allocation inside the innermost fori_loop body",
+    ),
+    "lint.accum_dtype": (
+        "error",
+        "accumulator allocation without an explicit float32 dtype",
+    ),
+    "lint.dma_pairing": (
+        "error",
+        "async-copy start()/wait() not paired in a kernel body",
+    ),
+}
+
+_TAINT_CALLS = {"program_id", "num_programs"}
+_ALLOC_CALLS = {"zeros", "ones", "full", "empty"}
+_F32_NAMES = {"float32"}
+
+
+def _attr_name(func: ast.expr) -> Optional[str]:
+    """The final attribute/name of a call target (``pl.program_id`` ->
+    ``program_id``)."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_ref_load(node: ast.expr, ref_names: Set[str]) -> bool:
+    """Whether ``node`` subscripts (loads from) a ``*_ref`` parameter."""
+    if not isinstance(node, ast.Subscript):
+        return False
+    base = node.value
+    while isinstance(base, ast.Attribute):
+        base = base.value
+    return isinstance(base, ast.Name) and base.id in ref_names
+
+
+def _expr_tainted(
+    node: ast.expr, tainted: Set[str], ref_names: Set[str]
+) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in tainted:
+            return True
+        if isinstance(sub, ast.Call):
+            if _attr_name(sub.func) in _TAINT_CALLS:
+                return True
+        if _is_ref_load(sub, ref_names):
+            return True
+    return False
+
+
+def _target_names(target: ast.expr) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        names: List[str] = []
+        for el in target.elts:
+            names += _target_names(el)
+        return names
+    return []
+
+
+def _tainted_names(fn: ast.FunctionDef, ref_names: Set[str]) -> Set[str]:
+    """Names bound (anywhere in the kernel body, nested defs included) to a
+    value derived from the grid position or a ref load.  Fixpoint over the
+    assignment graph — no flow sensitivity needed for a lint."""
+    tainted: Set[str] = set()
+    assigns = [n for n in ast.walk(fn) if isinstance(n, (ast.Assign, ast.AugAssign))]
+    for _ in range(len(assigns) + 1):
+        grew = False
+        for n in assigns:
+            targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+            names = [t for tgt in targets for t in _target_names(tgt)]
+            if not names:
+                continue
+            if _expr_tainted(n.value, tainted, ref_names):
+                for name in names:
+                    if name not in tainted:
+                        tainted.add(name)
+                        grew = True
+        if not grew:
+            break
+    return tainted
+
+
+def _loop_body_fns(fn: ast.FunctionDef) -> List[ast.FunctionDef]:
+    """The nested function defs passed to ``fori_loop`` as loop bodies."""
+    body_names: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call) and _attr_name(n.func) == "fori_loop":
+            if len(n.args) >= 3 and isinstance(n.args[2], ast.Name):
+                body_names.add(n.args[2].id)
+    return [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.FunctionDef) and n.name in body_names
+    ]
+
+
+def _calls_fori_loop(fn: ast.FunctionDef) -> bool:
+    return any(
+        isinstance(n, ast.Call) and _attr_name(n.func) == "fori_loop"
+        for n in ast.walk(fn)
+    )
+
+
+def _dtype_is_f32(node: ast.expr) -> bool:
+    if isinstance(node, ast.Attribute):
+        return node.attr in _F32_NAMES
+    if isinstance(node, ast.Name):
+        return node.id in _F32_NAMES
+    if isinstance(node, ast.Constant):
+        return node.value in ("float32", "f32")
+    return False
+
+
+def _alloc_dtype(call: ast.Call, name: str) -> Optional[ast.expr]:
+    """The dtype argument of a jnp.zeros/ones/full/empty call, positional
+    or keyword; None when absent."""
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    pos = 2 if name == "full" else 1  # full(shape, fill_value, dtype)
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def check_kernel_fn(
+    fn: ast.FunctionDef, path: str
+) -> List[Diagnostic]:
+    """All four lints over one kernel body."""
+    out: List[Diagnostic] = []
+    ref_names = {
+        a.arg
+        for a in fn.args.args + fn.args.kwonlyargs
+        if a.arg.endswith("_ref")
+    }
+
+    def diag(rule: str, node: ast.AST, message: str) -> None:
+        out.append(
+            Diagnostic(
+                rule=rule,
+                severity="error",
+                message=message,
+                layer=fn.name,
+                location=f"{path}:{getattr(node, 'lineno', fn.lineno)}",
+            )
+        )
+
+    # lint.traced_branch
+    tainted = _tainted_names(fn, ref_names)
+    for n in ast.walk(fn):
+        if isinstance(n, (ast.If, ast.While)):
+            if _expr_tainted(n.test, tainted, ref_names):
+                kind = "if" if isinstance(n, ast.If) else "while"
+                diag(
+                    "lint.traced_branch",
+                    n,
+                    f"host-side `{kind}` on a traced value; use pl.when / "
+                    f"jnp.where / lax.cond instead",
+                )
+
+    # lint.grid_alloc + lint.accum_dtype
+    loop_bodies = _loop_body_fns(fn)
+    innermost = {
+        id(b) for b in loop_bodies if not _calls_fori_loop(b)
+    }
+    inner_nodes: Set[int] = set()
+    for b in loop_bodies:
+        if id(b) in innermost:
+            inner_nodes.update(id(n) for n in ast.walk(b))
+    for n in ast.walk(fn):
+        if not isinstance(n, ast.Call):
+            continue
+        name = _attr_name(n.func)
+        if name not in _ALLOC_CALLS:
+            continue
+        if id(n) in inner_nodes:
+            diag(
+                "lint.grid_alloc",
+                n,
+                f"jnp.{name} inside the innermost fori_loop body; allocate "
+                f"outside the loop and carry it through",
+            )
+        dtype = _alloc_dtype(n, name)
+        if dtype is None or not _dtype_is_f32(dtype):
+            diag(
+                "lint.accum_dtype",
+                n,
+                f"jnp.{name} without an explicit float32 dtype; kernel "
+                f"accumulators must be f32 (bf16-in/f32-accumulate policy)",
+            )
+
+    # lint.dma_pairing
+    starts = [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.Call) and _attr_name(n.func) == "start"
+    ]
+    waits = [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.Call) and _attr_name(n.func) == "wait"
+    ]
+    if bool(starts) != bool(waits):
+        missing = "wait()" if starts else "start()"
+        anchor = (starts or waits)[0]
+        diag(
+            "lint.dma_pairing",
+            anchor,
+            f"async-copy {'start' if starts else 'wait'}() with no "
+            f"matching {missing} in this kernel body",
+        )
+    return out
+
+
+def check_source(path: str) -> List[Diagnostic]:
+    """Lint one Python source file; parse errors surface as diagnostics."""
+    try:
+        with open(path) as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    except (OSError, SyntaxError) as exc:
+        return [
+            Diagnostic(
+                rule="lint.traced_branch",
+                severity="error",
+                message=f"cannot parse {path}: {exc}",
+                location=path,
+            )
+        ]
+    out: List[Diagnostic] = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        args = node.args.args + node.args.kwonlyargs
+        if any(a.arg.endswith("_ref") for a in args):
+            out += check_kernel_fn(node, path)
+    return out
+
+
+def check_paths(paths: Iterable[str]) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for p in paths:
+        out += check_source(p)
+    return out

@@ -1,0 +1,389 @@
+"""Schedule rules: statically verify kernel dispatch for a lowered net.
+
+Drives the kernels' own pure dispatch probes —
+``kernels.sparse_conv.ops.resolve_schedule`` and
+``kernels.bsr_conv.ops.resolve_bsr_schedule`` — over every conv op a
+network can dispatch, without executing anything.  A plan entry that pins a
+method the probe rejects is exactly the configuration that silently falls
+back at serving time (the ``repro.telemetry.fallback`` reason codes), so
+every such finding is an **error**, mapped through
+``diagnostics.REASON_RULES`` to the rule that names the runtime reason.
+
+Without a plan entry, the same probes run as method-space coverage
+(severity ``info``): which sparse methods this geometry could ever run.
+
+Rules:
+
+  sched.smem_budget      scalar-prefetched operands (packed ELL indices /
+                         BCSR block-column table + aux rows) bust SMEM
+  sched.vmem_tiling      no VMEM-feasible tiling (or the plan-pinned one
+                         busts the budget, counting the pipeline's second
+                         halo buffer and the fused residual tile)
+  sched.nondividing_tm   a pinned output-channel tile does not divide M
+  sched.pipeline_demoted plan asks for the double-buffered halo DMA but
+                         the second halo buffer does not fit -> the kernel
+                         silently runs the blocking schedule (warning)
+  sched.dtype_policy     geometry dtype outside the bf16-in/f32-accumulate
+                         policy the kernels implement
+  sched.halo_bounds      a resolved tile's halo window would read past the
+                         padded input extent (invariant check)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+from repro.analysis.diagnostics import REASON_RULES, Diagnostic
+from repro.engine.program import ConvOp, Program
+from repro.kernels.budget import halo_extent
+from repro.kernels.bsr_conv.ops import resolve_bsr_schedule
+from repro.kernels.sparse_conv.ops import resolve_schedule
+from repro.tuning.planner import geometry_of_op
+
+RULES = {
+    "sched.smem_budget": (
+        "error",
+        "scalar-prefetched operands bust the SMEM budget",
+    ),
+    "sched.vmem_tiling": (
+        "error",
+        "no VMEM-feasible tiling for this geometry/schedule",
+    ),
+    "sched.nondividing_tm": (
+        "error",
+        "pinned output-channel tile does not divide M",
+    ),
+    "sched.pipeline_demoted": (
+        "warning",
+        "planned double-buffered halo DMA does not fit; kernel silently "
+        "runs the blocking schedule",
+    ),
+    "sched.dtype_policy": (
+        "error",
+        "dtype outside the bf16/f32-in, f32-accumulate kernel policy",
+    ),
+    "sched.halo_bounds": (
+        "error",
+        "tile halo window reads past the padded input extent",
+    ),
+}
+
+SUPPORTED_DTYPES = ("float32", "bfloat16", "float16")
+
+# Default BCSR block probed when no plan pins one (engine.DEFAULT_BSR_BLOCK;
+# re-declared to keep this module import-light).
+_DEFAULT_BLOCK = (8, 128)
+
+
+def _itemsize(dtype: str) -> int:
+    return 2 if dtype in ("bfloat16", "float16") else 4
+
+
+def _ell_k(
+    op: ConvOp,
+    pad_to: Optional[int],
+    params: Optional[Dict[str, Any]],
+    batch: int,
+    dtype: str,
+) -> int:
+    """The padded ELL row length the dispatch would see: the bound bank's
+    actual K when params are in hand, else the geometry estimate at the
+    plan's pad_to bucket."""
+    if params is not None:
+        entry = params.get(op.name) or {}
+        ell = entry.get("ell_auto") or entry.get("ell")
+        if ell is not None:
+            return int(ell.k)
+    g = geometry_of_op(op, batch=batch, dtype=dtype)
+    return g.k_est(pad_to or 8)
+
+
+def _halo_check(
+    op: ConvOp,
+    te: int,
+    tf: int,
+    *,
+    net: Optional[str],
+) -> List[Diagnostic]:
+    """Invariant: a resolved tile's halo'd input window must stay inside
+    the padded input.  ``resolve_*`` clamps te/tf to (e, f), which bounds
+    the halo by the padded extent — this guards that contract."""
+    out = []
+    hp, wp = op.h + 2 * op.pad, op.w + 2 * op.pad
+    if halo_extent(te, op.stride, op.k) > hp or (
+        halo_extent(tf, op.stride, op.k) > wp
+    ):
+        out.append(
+            Diagnostic(
+                rule="sched.halo_bounds",
+                severity="error",
+                message=(
+                    f"tile ({te}, {tf}) halo "
+                    f"({halo_extent(te, op.stride, op.k)}x"
+                    f"{halo_extent(tf, op.stride, op.k)}) exceeds padded "
+                    f"input {hp}x{wp}"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+    return out
+
+
+def check_pallas_entry(
+    op: ConvOp,
+    entry: Any,
+    *,
+    net: Optional[str] = None,
+    batch: int = 1,
+    dtype: str = "float32",
+    params: Optional[Dict[str, Any]] = None,
+) -> List[Diagnostic]:
+    """Verify one plan entry pinning ``method="pallas"`` dispatches to the
+    Pallas kernel (not the silent csr-direct fallback)."""
+    out: List[Diagnostic] = []
+    k = _ell_k(op, entry.pad_to, params, batch, dtype)
+    fuse_res = bool(entry.fuse) and op.res is not None
+    sched, reason = resolve_schedule(
+        op.m,
+        op.c,
+        op.e,
+        op.f,
+        k,
+        op.k,
+        op.k,
+        op.stride,
+        tm=entry.tm,
+        te=entry.te,
+        tf=entry.tf,
+        fuse_res=fuse_res,
+        pipeline=entry.pipeline,
+    )
+    if sched is None:
+        out.append(
+            Diagnostic(
+                rule=REASON_RULES[reason],
+                severity="error",
+                message=(
+                    f"plan pins pallas (tm={entry.tm} te={entry.te} "
+                    f"tf={entry.tf} pad_to={entry.pad_to} k={k}) but "
+                    f"dispatch falls back to csr-direct: {reason}"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+        return out
+    tm, te, tf, pipeline = sched
+    if entry.pipeline and not pipeline:
+        out.append(
+            Diagnostic(
+                rule="sched.pipeline_demoted",
+                severity="warning",
+                message=(
+                    f"plan asks for the double-buffered halo DMA but the "
+                    f"second halo buffer does not fit at (tm={tm}, te={te}, "
+                    f"tf={tf}); the kernel silently runs the blocking "
+                    f"schedule"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+    out += _halo_check(op, te, tf, net=net)
+    return out
+
+
+def check_bsr_entry(
+    op: ConvOp,
+    entry: Any,
+    *,
+    net: Optional[str] = None,
+    batch: int = 1,
+    dtype: str = "float32",
+) -> List[Diagnostic]:
+    """Verify one plan entry pinning ``method="bsr"`` dispatches to the MXU
+    kernel (not the silent dense fallback)."""
+    out: List[Diagnostic] = []
+    if entry.block_m is None or entry.block_n is None:
+        # Stale pre-v5 entry: the engine runs dense with
+        # engine_reason="stale_plan_no_block".
+        out.append(
+            Diagnostic(
+                rule="plan.stale_bsr_no_block",
+                severity="error",
+                message=(
+                    "plan pins bsr with no block shape (stale pre-v5 "
+                    "entry); the engine silently falls back to dense"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+        return out
+    bm, bn = int(entry.block_m), int(entry.block_n)
+    g = geometry_of_op(op, batch=batch, dtype=dtype)
+    gbm, gbn, _ = g.bsr_grid(bm, bn)
+    fuse_res = bool(entry.fuse) and op.res is not None
+    sched, reason = resolve_bsr_schedule(
+        op.c,
+        op.e,
+        op.f,
+        op.k,
+        op.k,
+        op.stride,
+        bm,
+        bn,
+        gbm,
+        gbn,
+        itemsize=_itemsize(dtype),
+        te=entry.te,
+        tf=entry.tf,
+        fuse_res=fuse_res,
+    )
+    if sched is None:
+        out.append(
+            Diagnostic(
+                rule=REASON_RULES[reason],
+                severity="error",
+                message=(
+                    f"plan pins bsr (block={bm}x{bn} te={entry.te} "
+                    f"tf={entry.tf}) but dispatch falls back to dense: "
+                    f"{reason}"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+        return out
+    te, tf = sched
+    out += _halo_check(op, te, tf, net=net)
+    return out
+
+
+def _probe_methods(
+    op: ConvOp,
+    *,
+    net: Optional[str],
+    batch: int,
+    dtype: str,
+    params: Optional[Dict[str, Any]],
+) -> List[Diagnostic]:
+    """Method-space coverage for an unplanned sparse conv: report (info)
+    every sparse method this geometry can never dispatch."""
+    out: List[Diagnostic] = []
+    k = _ell_k(op, None, params, batch, dtype)
+    sched, reason = resolve_schedule(
+        op.m, op.c, op.e, op.f, k, op.k, op.k, op.stride
+    )
+    if sched is None:
+        out.append(
+            Diagnostic(
+                rule=REASON_RULES[reason],
+                severity="info",
+                message=(
+                    f"method pallas unavailable for this geometry "
+                    f"(k={k}): {reason}"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+    bm, bn = _DEFAULT_BLOCK
+    g = geometry_of_op(op, batch=batch, dtype=dtype)
+    gbm, gbn, _ = g.bsr_grid(bm, bn)
+    sched, reason = resolve_bsr_schedule(
+        op.c,
+        op.e,
+        op.f,
+        op.k,
+        op.k,
+        op.stride,
+        bm,
+        bn,
+        gbm,
+        gbn,
+        itemsize=_itemsize(dtype),
+    )
+    if sched is None:
+        out.append(
+            Diagnostic(
+                rule=REASON_RULES[reason],
+                severity="info",
+                message=(
+                    f"method bsr unavailable at the default {bm}x{bn} "
+                    f"block: {reason}"
+                ),
+                net=net,
+                layer=op.name,
+            )
+        )
+    return out
+
+
+def check_network(
+    program: Program,
+    plan: Optional[Dict[str, Any]] = None,
+    *,
+    net: Optional[str] = None,
+    batch: int = 1,
+    dtype: str = "float32",
+    params: Optional[Dict[str, Any]] = None,
+) -> List[Diagnostic]:
+    """Schedule-verify every conv op of a lowered program.
+
+    ``plan`` is a ``{layer_name: PlanEntry}`` table (what ``CnnEngine``
+    binds); ops it pins to a Pallas/BCSR method are verified to actually
+    dispatch there (error otherwise).  Unplanned sparse ops get
+    method-space coverage probes at severity ``info``.
+    """
+    out: List[Diagnostic] = []
+    if dtype not in SUPPORTED_DTYPES:
+        out.append(
+            Diagnostic(
+                rule="sched.dtype_policy",
+                severity="error",
+                message=(
+                    f"dtype {dtype!r} outside the kernel policy "
+                    f"{SUPPORTED_DTYPES} (inputs bf16/f16/f32, f32 "
+                    f"accumulate)"
+                ),
+                net=net,
+            )
+        )
+        return out
+    for op in program.conv_ops:
+        if op.sparsity <= 0:
+            continue  # dense-kept layer: only ever runs dense
+        entry = (plan or {}).get(op.name)
+        if entry is None:
+            out += _probe_methods(
+                op, net=net, batch=batch, dtype=dtype, params=params
+            )
+        elif entry.method == "pallas":
+            out += check_pallas_entry(
+                op,
+                entry,
+                net=net,
+                batch=batch,
+                dtype=dtype,
+                params=params,
+            )
+        elif entry.method == "bsr":
+            out += check_bsr_entry(op, entry, net=net, batch=batch, dtype=dtype)
+        elif entry.tm is not None and (entry.tm < 1 or op.m % entry.tm):
+            # Non-Pallas methods ignore tm at execution time, but a
+            # nondividing tm in the entry signals a stale/mis-keyed plan.
+            out.append(
+                Diagnostic(
+                    rule="sched.nondividing_tm",
+                    severity="warning",
+                    message=(
+                        f"plan entry carries tm={entry.tm} which does not "
+                        f"divide m={op.m} (stale or mis-keyed plan?)"
+                    ),
+                    net=net,
+                    layer=op.name,
+                )
+            )
+    return out

@@ -7,7 +7,7 @@ threaded from the arch config down to the individual linear / conv call sites.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # Sparse execution methods.
 #   dense       : zero-filled dense weights, XLA native ops  (CUBLAS analogue)

@@ -15,9 +15,8 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 

@@ -130,13 +130,28 @@ class CnnEngine:
     blocked from the bound dense weights at trace time.  A stale plan entry
     claiming ``bsr`` with no block shape (pre-v5 cache) falls back to the
     dense executor.
+
+    ``strict=True`` runs the pre-flight static verifier at bind time
+    (``repro.analysis``): the lowered program is structurally checked and
+    every plan-pinned Pallas/BCSR schedule is verified to actually
+    dispatch — a configuration that would silently fall back at serving
+    time raises :class:`repro.analysis.PreflightError` here instead.
     """
 
     def __init__(self, program: Program, params: Dict[str, Any],
-                 plan: Optional[Dict[str, Any]] = None):
+                 plan: Optional[Dict[str, Any]] = None, *,
+                 strict: bool = False):
         self.program = program
         self.params = params
         self.plan = plan
+        if strict:
+            # Lazy import: repro.analysis imports this module's kernel deps.
+            from repro.analysis import PreflightError
+            from repro.analysis.checker import preflight
+            diags = preflight(program, plan, params)
+            errors = [d for d in diags if d.severity == "error"]
+            if errors:
+                raise PreflightError(errors)
         self.fc_weights = self._bind_fc(program, params)
         self._fns: Dict[Any, Any] = {}
         self._auto_plans: Dict[int, Dict[str, Any]] = {}

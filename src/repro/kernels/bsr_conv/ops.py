@@ -22,11 +22,11 @@ import jax.numpy as jnp
 
 from repro.core.direct_conv import out_spatial
 from repro.core.sparse_format import BcsrConv, bcsr_conv_to_dense
+from repro.kernels import budget
+from repro.kernels.budget import SMEM_BUDGET, VMEM_BUDGET, halo_extent
 from repro.kernels.bsr_conv.kernel import bsr_conv_pallas
 from repro.kernels.bsr_conv.ref import bsr_conv_ref
-from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
-                                           apply_epilogue, halo_extent,
-                                           spatial_candidates)
+from repro.kernels.sparse_conv.ops import apply_epilogue, spatial_candidates
 from repro.telemetry.fallback import record_fallback
 
 # The candidate (bm, bn) block shapes the autotuner enumerates: bn pinned to
@@ -38,8 +38,10 @@ BLOCK_CANDIDATES = ((8, 128), (16, 128), (32, 128), (64, 128))
 
 def bsr_smem_fits(gbm: int, kb: int) -> bool:
     """Both scalar-prefetched operands fit SMEM: the int32 block-column
-    table (gbm*KB) and the int32 nblocks row (gbm)."""
-    return gbm * kb * 4 + gbm * 4 <= SMEM_BUDGET
+    table (gbm*KB) and the int32 nblocks row (gbm).  Formula lives in
+    ``repro.kernels.budget``; the module-level ``SMEM_BUDGET`` alias is the
+    (monkeypatchable) budget this wrapper passes through."""
+    return budget.bsr_smem_fits(gbm, kb, smem_budget=SMEM_BUDGET)
 
 
 def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
@@ -47,13 +49,11 @@ def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
                     fuse_res: bool = False) -> bool:
     """Whether one (te, tf) spatial tiling's working set — halo'd input
     block + (bm, bn) weight tile + (bn, te, tf) patch tile + f32 out tile
-    (+ the residual input tile when fused) — fits the VMEM budget."""
-    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * itemsize
-    w_bytes = bm * bn * itemsize
-    patch_bytes = bn * te * tf * itemsize
-    out_bytes = bm * te * tf * 4
-    res_bytes = out_bytes if fuse_res else 0
-    return x_bytes + w_bytes + patch_bytes + out_bytes + res_bytes <= VMEM_BUDGET
+    (+ the residual input tile when fused) — fits the VMEM budget
+    (``repro.kernels.budget`` arithmetic, this module's budget alias)."""
+    return budget.bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
+                                  itemsize=itemsize, fuse_res=fuse_res,
+                                  vmem_budget=VMEM_BUDGET)
 
 
 def bsr_tile_candidates(c: int, e: int, f: int, r: int, s: int, stride: int,

@@ -11,9 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_format import BcsrMatrix
+from repro.kernels.budget import VMEM_BUDGET as _VMEM_BUDGET
 from repro.kernels.bsr_matmul.kernel import bsr_matmul_pallas
-
-_VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def choose_tb(b: int, bm: int, bn: int, itemsize: int) -> int:

@@ -1,0 +1,114 @@
+"""One source of truth for on-chip memory budgets and fit arithmetic.
+
+Every schedule decision in the stack — the ELL (``kernels/sparse_conv``)
+and BCSR (``kernels/bsr_conv``) conv wrappers, the autotuner's candidate
+pruning (``tuning/space.py``), and the pre-flight static verifier
+(``repro.analysis``) — must agree on two things: how much VMEM/SMEM a
+schedule's working set occupies, and how much the hardware offers.  Those
+formulas used to be split between the two kernel ``ops.py`` modules (with
+the budget constants re-declared in two more); this module is the single
+home for both, so a budget change (new chip generation, different Mosaic
+headroom) or a working-set term (a new scratch buffer) lands in exactly
+one place.
+
+The fit helpers take the budget as an explicit parameter defaulting to the
+canonical constants — the kernel wrappers pass their own (monkeypatchable)
+module aliases through, which keeps the historical test seams
+(``monkeypatch.setattr(ops, "_VMEM_BUDGET", ...)``) working while the
+arithmetic itself lives here.
+"""
+from __future__ import annotations
+
+# VMEM budget the autotuner packs blocks into (bytes).  v5e has ~16 MiB of
+# VMEM per core; leave headroom for Mosaic's own buffers and semaphores.
+VMEM_BUDGET = 12 * 1024 * 1024
+# SMEM budget for the scalar-prefetched operands: packed index array + int32
+# nnz row + f32 bias row (ELL), or block-column table + nblocks row (BCSR).
+SMEM_BUDGET = 2 * 1024 * 1024
+
+
+def halo_extent(t: int, stride: int, r: int) -> int:
+    """Input rows/cols one output tile of ``t`` positions touches."""
+    return (t - 1) * stride + r
+
+
+# -- ELL direct sparse conv (kernels/sparse_conv) ---------------------------
+
+def ell_smem_bytes(m: int, k: int) -> int:
+    """SMEM footprint of the ELL kernel's scalar-prefetched operands:
+    packed indices (M*K int32), the int32 nnz row (M*4 — the kernel's
+    per-row loop bounds), and the f32 bias row (M*4)."""
+    return m * k * 4 + m * 4 + m * 4
+
+
+def smem_fits(m: int, k: int, *, smem_budget: int = None) -> bool:
+    """All three scalar-prefetched operands fit the SMEM budget; omitting
+    the nnz row used to let index-heavy layers overshoot."""
+    budget = SMEM_BUDGET if smem_budget is None else smem_budget
+    return ell_smem_bytes(m, k) <= budget
+
+
+def ell_vmem_bytes(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                   stride: int, tm: int, te: int, tf: int,
+                   fuse_res: bool = False, pipeline: bool = False) -> int:
+    """VMEM working set of one ELL (tm, te, tf) tiling: halo'd input block
+    + value block + f32 out tile (+ the residual input tile when the fused
+    epilogue accumulates a shortcut).  ``pipeline=True`` accounts the
+    double-buffered halo DMA schedule: two halo-block scratch buffers are
+    live at once, so the staged-input term doubles."""
+    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
+    if pipeline:
+        x_bytes *= 2
+    out_bytes = tm * te * tf * 4
+    res_bytes = out_bytes if fuse_res else 0
+    return x_bytes + tm * k * 4 + out_bytes + res_bytes
+
+
+def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
+                stride: int, tm: int, te: int, tf: int,
+                fuse_res: bool = False, pipeline: bool = False,
+                *, vmem_budget: int = None) -> bool:
+    """Whether one ELL (tm, te, tf) tiling's working set fits VMEM."""
+    if tm < 1 or m % tm:
+        return False
+    budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
+    return ell_vmem_bytes(m, c, e, f, k, r, s, stride, tm, te, tf,
+                          fuse_res=fuse_res, pipeline=pipeline) <= budget
+
+
+# -- BCSR MXU conv (kernels/bsr_conv) ---------------------------------------
+
+def bsr_smem_bytes(gbm: int, kb: int) -> int:
+    """SMEM footprint of the BCSR kernel's scalar-prefetched operands: the
+    int32 block-column table (gbm*KB) and the int32 nblocks row (gbm)."""
+    return gbm * kb * 4 + gbm * 4
+
+
+def bsr_smem_fits(gbm: int, kb: int, *, smem_budget: int = None) -> bool:
+    """Both scalar-prefetched BCSR operands fit the SMEM budget."""
+    budget = SMEM_BUDGET if smem_budget is None else smem_budget
+    return bsr_smem_bytes(gbm, kb) <= budget
+
+
+def bsr_vmem_bytes(c: int, r: int, s: int, stride: int, bm: int, bn: int,
+                   te: int, tf: int, itemsize: int = 4,
+                   fuse_res: bool = False) -> int:
+    """VMEM working set of one BCSR (te, tf) spatial tiling: halo'd input
+    block + (bm, bn) weight tile + (bn, te, tf) patch tile + f32 out tile
+    (+ the residual input tile when fused)."""
+    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * itemsize
+    w_bytes = bm * bn * itemsize
+    patch_bytes = bn * te * tf * itemsize
+    out_bytes = bm * te * tf * 4
+    res_bytes = out_bytes if fuse_res else 0
+    return x_bytes + w_bytes + patch_bytes + out_bytes + res_bytes
+
+
+def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
+                    te: int, tf: int, itemsize: int = 4,
+                    fuse_res: bool = False, *,
+                    vmem_budget: int = None) -> bool:
+    """Whether one BCSR (te, tf) spatial tiling's working set fits VMEM."""
+    budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
+    return bsr_vmem_bytes(c, r, s, stride, bm, bn, te, tf, itemsize=itemsize,
+                          fuse_res=fuse_res) <= budget

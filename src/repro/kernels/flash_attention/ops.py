@@ -4,9 +4,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-_VMEM_BUDGET = 12 * 1024 * 1024
+from repro.kernels.budget import VMEM_BUDGET as _VMEM_BUDGET
 
 
 def choose_chunks(t: int, s: int, d: int, itemsize: int):

@@ -32,15 +32,17 @@ import numpy as np
 from repro.core.direct_conv import direct_sparse_conv, out_spatial
 from repro.core.sparse_format import (EllConv, ell_from_dense_conv,
                                       inverse_permutation)
+from repro.kernels import budget
+from repro.kernels.budget import halo_extent  # noqa: F401  (re-export)
 from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 from repro.telemetry.fallback import record_fallback
 
-# VMEM budget the autotuner packs blocks into (bytes).  v5e has ~16 MiB of
-# VMEM per core; leave headroom for Mosaic's own buffers and semaphores.
-_VMEM_BUDGET = 12 * 1024 * 1024
-# SMEM budget for the scalar-prefetched operands: packed index array + int32
-# nnz row + f32 bias row.
-_SMEM_BUDGET = 2 * 1024 * 1024
+# Budget constants live in ``repro.kernels.budget`` (one source of truth for
+# kernels, tuner, and the static verifier); these module aliases stay so
+# existing callers — and tests that monkeypatch them — keep working.  The
+# fit wrappers below re-read the aliases at call time and pass them through.
+_VMEM_BUDGET = budget.VMEM_BUDGET
+_SMEM_BUDGET = budget.SMEM_BUDGET
 
 # Public aliases consumed by repro.tuning (candidate-space pruning).
 VMEM_BUDGET = _VMEM_BUDGET
@@ -51,17 +53,12 @@ _TM_LADDER = (128, 64, 32, 16, 8, 4, 2, 1)
 _SPATIAL_LADDER = (128, 64, 32, 16, 8)
 
 
-def halo_extent(t: int, stride: int, r: int) -> int:
-    """Input rows/cols one output tile of ``t`` positions touches."""
-    return (t - 1) * stride + r
-
-
 def smem_fits(m: int, k: int) -> bool:
     """All three scalar-prefetched operands fit the SMEM budget: packed
     indices (M*K int32), the int32 nnz row (M*4 — the kernel's per-row loop
     bounds; omitting it used to let index-heavy layers overshoot), and the
     f32 bias row (M*4)."""
-    return m * k * 4 + m * 4 + m * 4 <= _SMEM_BUDGET
+    return budget.smem_fits(m, k, smem_budget=_SMEM_BUDGET)
 
 
 def spatial_candidates(e: int) -> List[int]:
@@ -105,14 +102,9 @@ def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     ``pipeline=True`` accounts the double-buffered halo DMA schedule: two
     halo-block scratch buffers are live at once (the one being computed on
     and the one being prefetched), so the staged-input term doubles."""
-    if tm < 1 or m % tm:
-        return False
-    x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
-    if pipeline:
-        x_bytes *= 2
-    out_bytes = tm * te * tf * 4
-    res_bytes = out_bytes if fuse_res else 0
-    return x_bytes + tm * k * 4 + out_bytes + res_bytes <= _VMEM_BUDGET
+    return budget.tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
+                              fuse_res=fuse_res, pipeline=pipeline,
+                              vmem_budget=_VMEM_BUDGET)
 
 
 def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,

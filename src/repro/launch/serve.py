@@ -205,7 +205,6 @@ def main() -> None:
 
     # prefill token-by-token (smoke-scale; production uses the prefill step)
     t0 = time.time()
-    tok = prompts[:, :1]
     with span("prefill", tokens=p, batch=b):
         for i in range(p):
             nxt, cache = serve_step(params, prompts[:, i:i + 1], cache,

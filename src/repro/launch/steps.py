@@ -17,7 +17,7 @@ Distributed-optimization knobs (DESIGN.md §5):
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

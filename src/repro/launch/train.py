@@ -9,7 +9,6 @@ configs; the same code path lowers against the production meshes).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -23,7 +22,6 @@ from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import init_state, make_train_step, state_shardings
 from repro.models import flags as F
-from repro.models import transformer as T
 from repro.optim import AdamWConfig
 from repro.runtime import StepRunner, StragglerMonitor
 

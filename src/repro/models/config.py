@@ -8,7 +8,7 @@ instantiates these with the exact published sizes plus a reduced smoke config.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.core.types import DENSE, SparsityConfig
 

@@ -26,7 +26,6 @@ over tp (manual axis), d_model over fsdp (auto).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -66,7 +65,6 @@ def _ep_local(p: Params, xg: jax.Array, cfg: ModelConfig, *, ax: str,
     n, d = xg.shape
     e, k = cfg.n_experts, cfg.top_k
     e_loc = e // tp
-    rank = lax.axis_index(ax)
 
     logits = jnp.einsum("gd,de->ge", xg.astype(jnp.float32), p["router"])
     topw, topi = lax.top_k(jax.nn.softmax(logits, axis=-1), k)

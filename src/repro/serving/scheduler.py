@@ -22,11 +22,9 @@ correct, if not latency-optimal).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

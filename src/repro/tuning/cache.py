@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
@@ -43,6 +44,11 @@ from repro.tuning.space import Candidate, ConvGeometry
 CACHE_VERSION = 5
 # Older schema versions load() can migrate in-memory (see module docstring).
 MIGRATABLE_VERSIONS = (1, 2, 3, 4)
+
+
+class PlanCacheWarning(UserWarning):
+    """A plan-cache file could not be loaded (or was partially dropped) and
+    the deployment continues on an empty/reduced cache instead."""
 
 # Sparsity bucket width for cache keys: layers within 5% density share plans.
 SPARSITY_BUCKET = 0.05
@@ -136,26 +142,70 @@ class PlanCache:
     def put(self, key: str, entry: PlanEntry) -> None:
         self.entries[key] = entry
 
-    def load(self, path: Optional[str] = None) -> "PlanCache":
+    def load(self, path: Optional[str] = None, *,
+             strict: bool = False) -> "PlanCache":
+        """Load a plan-cache document, resiliently by default.
+
+        A plan cache is an accelerator, not a correctness input, so a
+        corrupt, truncated, or unknown-schema file must not take a deploy
+        down.  By default every load failure — unreadable file, invalid
+        JSON, a non-migratable version, a malformed document shape — emits
+        a :class:`PlanCacheWarning` (plus the ``tuning.cache.load_errors``
+        counter when telemetry is on) and leaves the cache *empty*, exactly
+        as on a cold deploy; individually malformed entries are dropped the
+        same way without discarding their healthy siblings.
+        ``strict=True`` restores the raising behaviour — what the
+        ``repro.analysis`` plan-cache audit uses to localise corruption.
+        """
         path = path or self.path
-        with open(path) as fh:
-            doc = json.load(fh)
-        version = doc.get("version")
-        if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
-            raise ValueError(
-                f"plan cache {path} has version {version!r}, "
-                f"expected {CACHE_VERSION} (or migratable "
-                f"{MIGRATABLE_VERSIONS})")
+        self.entries = {}
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+            if not isinstance(doc, dict):
+                raise ValueError(
+                    f"plan cache {path} is not a JSON object "
+                    f"(got {type(doc).__name__})")
+            version = doc.get("version")
+            if version != CACHE_VERSION and version not in MIGRATABLE_VERSIONS:
+                raise ValueError(
+                    f"plan cache {path} has version {version!r}, "
+                    f"expected {CACHE_VERSION} (or migratable "
+                    f"{MIGRATABLE_VERSIONS})")
+            raw = doc.get("entries", {})
+            if not isinstance(raw, dict):
+                raise ValueError(
+                    f"plan cache {path} 'entries' is not an object")
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError,
+                ValueError) as exc:
+            if strict:
+                raise
+            self._load_error(path, str(exc))
+            return self
         # v1-v4 migration happens in from_dict: absent te/tf default to None
         # (the untiled schedule), absent fuse to False (the unfused
         # epilogue), absent pipeline/permute to False (blocking DMA,
         # natural row order), and absent block_m/block_n to None (no BCSR
         # shape).  save() re-persists as the current version.
         provenance = "cache_hit" if version == CACHE_VERSION else "migrated"
-        self.entries = {
-            k: dataclasses.replace(PlanEntry.from_dict(v),
-                                   provenance=provenance)
-            for k, v in doc.get("entries", {}).items()}
+        dropped = []
+        for k, v in raw.items():
+            try:
+                entry = PlanEntry.from_dict(v)
+            except (TypeError, KeyError, ValueError, AttributeError) as exc:
+                if strict:
+                    raise ValueError(
+                        f"plan cache {path} entry {k!r} is malformed: {exc}"
+                    ) from exc
+                dropped.append(k)
+                continue
+            self.entries[k] = dataclasses.replace(entry,
+                                                  provenance=provenance)
+        if dropped:
+            self._load_error(
+                path, f"dropped {len(dropped)} malformed entr"
+                      f"{'y' if len(dropped) == 1 else 'ies'} "
+                      f"(e.g. {dropped[0]!r})")
         from repro import telemetry  # local: keep module deps one-way
         if telemetry.is_enabled():
             telemetry.counter("tuning.cache.loads").inc()
@@ -165,6 +215,16 @@ class PlanCache:
                 telemetry.counter("tuning.cache.load_migrations").inc(
                     len(self.entries))
         return self
+
+    @staticmethod
+    def _load_error(path: Optional[str], detail: str) -> None:
+        """One non-strict load failure: warn + gated telemetry counter."""
+        warnings.warn(
+            f"plan cache {path}: {detail}; continuing with an empty cache "
+            "(the planner will re-tune)", PlanCacheWarning, stacklevel=3)
+        from repro import telemetry  # local: keep module deps one-way
+        if telemetry.is_enabled():
+            telemetry.counter("tuning.cache.load_errors").inc()
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path

@@ -27,7 +27,7 @@ import numpy as np
 from repro import telemetry
 from repro.core.sparse_format import (bcsr_conv_from_dense, ell_from_dense,
                                       ell_from_dense_conv)
-from repro.engine import ConvOp, Program, lower, spec
+from repro.engine import ConvOp, Program, lower
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key
 from repro.tuning.measure import (bcsr_true_kept, measurable,
                                   measure_candidate, roofline_estimate)

@@ -47,9 +47,9 @@ import dataclasses
 import math
 from typing import List, Optional, Tuple
 
-from repro.kernels.bsr_conv.ops import (BLOCK_CANDIDATES, bsr_smem_fits,
-                                        bsr_tile_candidates)
-from repro.kernels.sparse_conv.ops import smem_fits, tile_candidates
+from repro.kernels.bsr_conv.ops import BLOCK_CANDIDATES, bsr_tile_candidates
+from repro.kernels.budget import bsr_smem_fits, smem_fits
+from repro.kernels.sparse_conv.ops import tile_candidates
 
 METHODS = ("dense", "lowered", "csr-direct", "pallas", "bsr")
 

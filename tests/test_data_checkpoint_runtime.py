@@ -1,12 +1,10 @@
 """Data pipeline determinism, checkpoint commit/restore/GC, fault-tolerance
 runtime (straggler monitor, failure retry with restore)."""
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, latest_step, restore_state, save_state
 from repro.data import DataConfig, SyntheticLMDataset, make_loader
@@ -25,7 +23,6 @@ def test_data_deterministic_by_step():
 
 
 def test_data_host_sharding_disjoint():
-    full = DataConfig(seq_len=8, global_batch=8, vocab=100, seed=1)
     h0 = DataConfig(seq_len=8, global_batch=8, vocab=100, seed=1, n_hosts=2,
                     host_id=0)
     h1 = DataConfig(seq_len=8, global_batch=8, vocab=100, seed=1, n_hosts=2,

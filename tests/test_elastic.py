@@ -4,7 +4,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 SCRIPT = textwrap.dedent("""
     import os

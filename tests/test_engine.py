@@ -18,7 +18,7 @@ from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.pruning import magnitude_prune
 from repro.core.sparse_format import ell_from_dense, ell_from_dense_conv
-from repro.engine import (CnnEngine, ConcatOp, ConvOp, FCOp, PoolOp,
+from repro.engine import (ConcatOp, ConvOp, FCOp, PoolOp,
                           ReluOp, ResidualAddOp, lower)
 from repro.models import cnn
 

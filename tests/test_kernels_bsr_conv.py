@@ -7,9 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (bcsr_conv_from_dense, bcsr_conv_to_dense,
-                        block_prune_conv, ell_from_dense_conv,
-                        magnitude_prune)
+from repro.core import (bcsr_conv_from_dense, block_prune_conv,
+                        ell_from_dense_conv, magnitude_prune)
 from repro.core.direct_conv import direct_sparse_conv, out_spatial
 from repro.kernels.bsr_conv import ops
 from repro.kernels.bsr_conv.ops import (bsr_conv, bsr_smem_fits,

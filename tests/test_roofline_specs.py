@@ -1,14 +1,11 @@
 """Roofline HLO parsing + input-spec construction (no device allocation)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs as cfgs
 from repro.launch import roofline as rl
 from repro.launch import specs as S
-from repro.models.config import ModelConfig
 
 
 HLO_SAMPLE = """

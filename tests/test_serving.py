@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.steps import make_serve_step
 from repro.models import transformer as T
@@ -107,7 +106,7 @@ def test_engine_serves_all_requests():
     reqs = [Request(i, [1 + i, 2, 3], max_new_tokens=4) for i in range(7)]
     for r in reqs:
         eng.submit(r)
-    done = eng.run_until_drained()
+    eng.run_until_drained()
     assert all(r.done for r in reqs)
     for r in reqs:
         assert len(r.output) == 4, r

@@ -1,14 +1,11 @@
 """End-to-end behaviour tests: train->improve, prune->serve, CNN inference
 agreement across all execution methods (the paper's core contract)."""
-import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data import DataConfig, make_loader
 from repro.launch.serve import sparsify_params
 from repro.launch.steps import init_state, make_serve_step, make_train_step
 from repro.models import cnn

@@ -1,6 +1,7 @@
 """Kernel-customization autotuner: space validity, cache round-trip,
 and method="auto" numerical equivalence (interpret mode, CPU)."""
 import dataclasses
+import json
 
 import jax.numpy as jnp
 import numpy as np
@@ -12,8 +13,7 @@ from repro.kernels.sparse_conv.ops import (SMEM_BUDGET, VMEM_BUDGET,
 from repro.models import cnn
 from repro.tuning import (Candidate, ConvGeometry, PlanCache, PlanEntry,
                           apply_plan_to_params, enumerate_candidates,
-                          layer_key, plan_network, roofline_estimate,
-                          sparsity_bucket)
+                          layer_key, plan_network, roofline_estimate)
 
 
 def _geom(**kw):
@@ -503,10 +503,75 @@ def test_plan_cache_roundtrip(tmp_path):
 
 
 def test_plan_cache_version_guard(tmp_path):
+    """An unknown schema version warns and falls back to an empty cache by
+    default (a stale cache must not take a deploy down); strict load keeps
+    the historical ValueError for tooling that wants to localise it."""
+    from repro.tuning.cache import PlanCacheWarning
+
     path = tmp_path / "bad.json"
     path.write_text('{"version": 999, "entries": {}}')
-    with pytest.raises(ValueError):
-        PlanCache(str(path))
+    with pytest.warns(PlanCacheWarning, match="version 999"):
+        cache = PlanCache(str(path))
+    assert len(cache) == 0
+    with pytest.raises(ValueError, match="version 999"):
+        PlanCache().load(str(path), strict=True)
+
+
+@pytest.mark.parametrize("text, match", [
+    ('{"version": 5, "entries": {', "Expecting"),      # truncated mid-write
+    ("not json at all", "Expecting"),                  # corrupt
+    ("[1, 2, 3]", "not a JSON object"),                # wrong document shape
+    ('{"version": 5, "entries": [1]}', "not an object"),  # wrong entries shape
+])
+def test_plan_cache_mangled_file_falls_back_empty(tmp_path, text, match):
+    """Corrupt/truncated cache files emit a diagnostic and fall back to an
+    empty cache instead of raising mid-deploy; strict load raises."""
+    from repro.tuning.cache import PlanCacheWarning
+
+    path = tmp_path / "mangled.json"
+    path.write_text(text)
+    with pytest.warns(PlanCacheWarning, match=match):
+        cache = PlanCache(str(path))
+    assert len(cache) == 0
+    with pytest.raises((ValueError, json.JSONDecodeError)):
+        PlanCache().load(str(path), strict=True)
+
+
+def test_plan_cache_malformed_entry_dropped(tmp_path):
+    """A single malformed entry is dropped with a warning; healthy siblings
+    survive the load."""
+    from repro.tuning.cache import CACHE_VERSION, PlanCacheWarning
+
+    path = tmp_path / "partial.json"
+    path.write_text(json.dumps({
+        "version": CACHE_VERSION,
+        "entries": {
+            "good": {"method": "dense"},
+            "bad": {"tm": 64},          # missing required "method"
+            "worse": "not-a-dict",
+        }}))
+    with pytest.warns(PlanCacheWarning, match="dropped 2 malformed"):
+        cache = PlanCache(str(path))
+    assert set(cache.entries) == {"good"}
+    assert cache.entries["good"].method == "dense"
+    with pytest.raises(ValueError, match="malformed"):
+        PlanCache().load(str(path), strict=True)
+
+
+def test_plan_cache_load_errors_counter(tmp_path):
+    """Non-strict load failures bump the tuning.cache.load_errors counter
+    when telemetry is enabled."""
+    from repro import telemetry
+    from repro.tuning.cache import PlanCacheWarning
+
+    path = tmp_path / "bad.json"
+    path.write_text("garbage")
+    with telemetry.enabled():
+        before = telemetry.counter("tuning.cache.load_errors").value
+        with pytest.warns(PlanCacheWarning):
+            PlanCache(str(path))
+        after = telemetry.counter("tuning.cache.load_errors").value
+    assert after == before + 1
 
 
 def test_plan_cache_v1_migration(tmp_path):
