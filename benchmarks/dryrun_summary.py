@@ -69,10 +69,12 @@ def smoke() -> None:
     _smoke_bench_json(bench_sparse_conv)
     _smoke_cache_migrations()
     _smoke_traced_forward()
+    _smoke_quantised_forward()
     _smoke_static_verifier()
     print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
-          "bench json pipeline + bsr rows + zero fallbacks, cache v1-v4 -> "
-          "v5 migrations, traced forward valid, static verifier clean")
+          "bench json pipeline + bsr + quantised rows + zero fallbacks, "
+          "cache v1-v5 -> v6 migrations, traced + int8-pinned forwards "
+          "valid, static verifier clean")
 
 
 def _smoke_bench_json(bench_sparse_conv) -> None:
@@ -99,10 +101,19 @@ def _smoke_bench_json(bench_sparse_conv) -> None:
                     f"bench smoke: {rec['name']} missing the auto row")
         if not any("bsr" in rec["schedules"] for rec in layers):
             raise SystemExit("bench smoke: no bsr (MXU) schedule rows")
+        for rec in layers:
+            if "blocking_int8" not in rec["schedules"]:
+                raise SystemExit(
+                    f"bench smoke: {rec['name']} missing the int8 twin row")
+            if "value_dtype" not in rec.get("auto_roofline", {}):
+                raise SystemExit(
+                    f"bench smoke: {rec['name']} auto row missing "
+                    f"value_dtype")
         # the invariants already ran inside run(); assert they are wired
         bench_sparse_conv.check_stall_invariant(doc)
         bench_sparse_conv.check_mxu_crossover(doc)
         bench_sparse_conv.check_zero_fallback(doc)
+        bench_sparse_conv.check_quantised_bytes(doc)
         # every record must carry the fallback field (null == plan runs)
         for rec in layers:
             if "fallback" not in rec:
@@ -111,7 +122,7 @@ def _smoke_bench_json(bench_sparse_conv) -> None:
 
 
 def _smoke_cache_migrations() -> None:
-    """Every migratable plan-cache schema (v1-v4) loads, defaults the fields
+    """Every migratable plan-cache schema (v1-v5) loads, defaults the fields
     its kernels predate, and re-persists as the current version."""
     import tempfile
 
@@ -124,6 +135,8 @@ def _smoke_cache_migrations() -> None:
             "fuse": True},
         4: {"method": "pallas", "tm": 16, "te": 16, "tf": 16, "pad_to": 8,
             "fuse": True, "pipeline": True, "permute": True},
+        5: {"method": "bsr", "te": 16, "tf": 16, "fuse": True,
+            "block_m": 8, "block_n": 128},
     }
     if set(fixtures) != set(MIGRATABLE_VERSIONS):
         raise SystemExit("cache smoke: fixture set out of date with "
@@ -138,10 +151,14 @@ def _smoke_cache_migrations() -> None:
                 raise SystemExit(
                     f"cache smoke: v{ver} entry migrated with a non-blocking "
                     "schedule")
-            if pe.block_m is not None or pe.block_n is not None:
+            if ver < 5 and (pe.block_m is not None or pe.block_n is not None):
                 raise SystemExit(
                     f"cache smoke: v{ver} entry migrated with a BCSR block "
                     "shape no pre-v5 kernel ran")
+            if pe.value_dtype != "float32":
+                raise SystemExit(
+                    f"cache smoke: v{ver} entry migrated with a quantised "
+                    "value stream no pre-v6 kernel ran")
             out = pathlib.Path(td) / f"v{ver}-migrated.json"
             cache.save(str(out))
             doc = json.loads(out.read_text())
@@ -203,6 +220,57 @@ def _smoke_traced_forward() -> None:
             if not any(ev.get("ph") == "X" for ev in doc["traceEvents"]):
                 raise SystemExit("trace smoke: no complete (X) span events")
     telemetry.reset()
+
+
+def _smoke_quantised_forward() -> None:
+    """One engine forward with an int8-pinned plan (the CI bench-smoke leg
+    for the quantised value streams): every sparse conv must execute its
+    planned kernel on the int8 bank — no silent fallbacks — and the output
+    must agree with the f32-bank forward to quantisation tolerance."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro import telemetry
+    from repro.engine import CnnEngine, lower
+    from repro.models import cnn
+    from repro.tuning import PlanCache, apply_plan_to_params, plan_program
+
+    micro = [
+        cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+        cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu(),
+        cnn.Pool("gap"), cnn.FC("fc", 10),
+    ]
+    rng = np.random.default_rng(0)
+    program = lower(micro, (3, 8, 8))
+    params = cnn.init_cnn(micro, 3, rng, 8)
+    plan = plan_program(program, batch=1, mode="roofline", cache=PlanCache())
+    plan = {name: (dataclasses.replace(pe, value_dtype="int8")
+                   if pe.method in ("pallas", "bsr") else pe)
+            for name, pe in plan.items()}
+    if not any(pe.value_dtype == "int8" for pe in plan.values()):
+        raise SystemExit("quantised smoke: no pallas/bsr entry to pin int8")
+    qparams = apply_plan_to_params(params, plan)
+    x = rng.standard_normal((1, 3, 8, 8)).astype(np.float32)
+    engine = CnnEngine(program, qparams, plan, strict=True)
+    telemetry.reset()
+    with telemetry.enabled():
+        y_q = np.asarray(engine(x, "auto"))
+        report = engine.last_report
+    telemetry.reset()
+    if report is None or report.fallback_count:
+        raise SystemExit(
+            "quantised smoke: int8-pinned forward took silent fallbacks: "
+            f"{[(o.name, o.fallback_reason) for o in report.fallback_ops]}")
+    if not any(o.value_dtype == "int8" for o in report.ops):
+        raise SystemExit(
+            "quantised smoke: no op executed an int8 value stream")
+    y_f = np.asarray(CnnEngine(program, params, None)(x, "dense"))
+    denom = float(np.abs(y_f).max()) or 1.0
+    rel = float(np.abs(y_q - y_f).max()) / denom
+    if not np.isfinite(rel) or rel > 0.05:
+        raise SystemExit(
+            f"quantised smoke: int8 forward diverges from f32 (rel={rel})")
 
 
 def _smoke_static_verifier() -> None:

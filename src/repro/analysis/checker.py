@@ -112,7 +112,7 @@ def check_network(
             program, plan_cache, batch=batch, dtype=dtype, backend=backend
         )
     out += schedule_rules.check_network(
-        program, plan, net=net, batch=batch, dtype=dtype
+        program, plan, net=net, batch=batch, dtype=dtype, backend=backend
     )
     return out
 
@@ -176,12 +176,22 @@ def preflight(
     *,
     batch: int = 1,
     dtype: str = "float32",
+    backend: Optional[str] = None,
 ) -> List[Diagnostic]:
     """Verify one bound (program, plan, params) triple — the engine's
     strict-mode hook.  Pure Python over shapes and plan entries; returns
-    the diagnostics (the engine raises on any error-severity finding)."""
+    the diagnostics (the engine raises on any error-severity finding).
+
+    ``backend=None`` verifies against the backend the bind would execute
+    on (``jax.default_backend()``) — what gates, e.g., an fp8-pinned entry
+    reaching a host with no fp8 value-stream path."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
     out = program_rules.check_program(program)
     out += schedule_rules.check_network(
-        program, plan, batch=batch, dtype=dtype, params=params
+        program, plan, batch=batch, dtype=dtype, backend=backend,
+        params=params
     )
     return out

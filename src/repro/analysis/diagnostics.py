@@ -27,6 +27,7 @@ REASON_RULES = {
     "no_feasible_tiling": "sched.vmem_tiling",
     "nondividing_tm": "sched.nondividing_tm",
     "stale_plan_no_block": "plan.stale_bsr_no_block",
+    "value_dtype_mismatch": "sched.value_dtype_mismatch",
 }
 
 

@@ -27,7 +27,13 @@ Rules:
 
 Schedule infeasibilities found while replaying an entry at its key's
 geometry are reported under the ``sched.*`` rules (same ids the network
-check uses), so one rule id names one failure mode everywhere.
+check uses), so one rule id names one failure mode everywhere.  That
+includes the v6 value-dtype axis: an entry pinning an unknown value dtype,
+or one its key's backend cannot execute (fp8 off-TPU), reports as
+``sched.value_dtype``; quantised entries replay their dispatch probes with
+the narrow value itemsize and the scale-row budget, so a schedule that
+only fits with f32 values — or only with quantised ones — is caught at the
+dtype it will actually run.
 """
 
 from __future__ import annotations
@@ -40,7 +46,8 @@ from repro.analysis.diagnostics import REASON_RULES, Diagnostic
 from repro.kernels.bsr_conv.ops import resolve_bsr_schedule
 from repro.kernels.sparse_conv.ops import resolve_schedule
 from repro.tuning.cache import CACHE_VERSION, MIGRATABLE_VERSIONS
-from repro.tuning.space import METHODS, ConvGeometry
+from repro.tuning.space import (METHODS, VALUE_DTYPES, ConvGeometry,
+                                allowed_value_dtypes)
 
 RULES = {
     "plan.unreadable": (
@@ -120,6 +127,7 @@ def _check_entry_schedule(
     method = entry.get("method")
     fuse_res = bool(entry.get("fuse", False)) and g.residual
     itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
+    vdt = entry.get("value_dtype", "float32") or "float32"
     if method == "pallas":
         tm = entry.get("tm")
         if tm is not None and (tm < 1 or g.m % tm):
@@ -147,6 +155,7 @@ def _check_entry_schedule(
             tf=entry.get("tf"),
             fuse_res=fuse_res,
             pipeline=bool(entry.get("pipeline", False)),
+            value_dtype=vdt,
         )
         if sched is None:
             out.append(
@@ -189,6 +198,7 @@ def _check_entry_schedule(
             te=entry.get("te"),
             tf=entry.get("tf"),
             fuse_res=fuse_res,
+            value_dtype=vdt,
         )
         if sched is None:
             out.append(
@@ -275,6 +285,43 @@ def _check_entry(
                 f"key encodes an impossible geometry (padded input "
                 f"{hp}x{wp}, kernel {g.r}x{g.s}, stride {g.stride}, "
                 f"sparsity {g.sparsity})",
+                key,
+            )
+        )
+        return out
+    vdt = entry.get("value_dtype", "float32") or "float32"
+    if method in ("pallas", "bsr") and vdt != "float32":
+        if vdt not in VALUE_DTYPES:
+            out.append(
+                _diag(
+                    "sched.value_dtype",
+                    "error",
+                    f"entry pins unknown value dtype {vdt!r}; one of "
+                    f"{VALUE_DTYPES}",
+                    key,
+                )
+            )
+            return out
+        backend = m.group("backend")
+        allowed = allowed_value_dtypes(backend)
+        if vdt not in allowed:
+            out.append(
+                _diag(
+                    "sched.value_dtype",
+                    "error",
+                    f"entry pins value dtype {vdt!r} but its key's backend "
+                    f"{backend!r} only executes {allowed}",
+                    key,
+                )
+            )
+            return out
+    elif method not in ("pallas", "bsr") and vdt != "float32":
+        out.append(
+            _diag(
+                "sched.value_dtype",
+                "error",
+                f"entry pins value dtype {vdt!r} on method {method!r}, "
+                f"which has no quantised value-stream path",
                 key,
             )
         )

@@ -27,6 +27,17 @@ Rules:
                          policy the kernels implement
   sched.halo_bounds      a resolved tile's halo window would read past the
                          padded input extent (invariant check)
+  sched.value_dtype      pinned value-storage dtype unknown, pinned on a
+                         method with no quantised path, or not executable
+                         on this backend (fp8 off-TPU) — the dtype policy
+                         is ``tuning.space.allowed_value_dtypes``, the same
+                         table the planner enumerates from
+  sched.value_dtype_mismatch
+                         the plan's pinned value dtype disagrees with an
+                         already-quantised bound bank — the engine falls
+                         back to dense with the ``value_dtype_mismatch``
+                         runtime reason rather than silently re-coding the
+                         bank
 """
 
 from __future__ import annotations
@@ -39,6 +50,7 @@ from repro.kernels.budget import halo_extent
 from repro.kernels.bsr_conv.ops import resolve_bsr_schedule
 from repro.kernels.sparse_conv.ops import resolve_schedule
 from repro.tuning.planner import geometry_of_op
+from repro.tuning.space import VALUE_DTYPES, allowed_value_dtypes
 
 RULES = {
     "sched.smem_budget": (
@@ -65,6 +77,16 @@ RULES = {
     "sched.halo_bounds": (
         "error",
         "tile halo window reads past the padded input extent",
+    ),
+    "sched.value_dtype": (
+        "error",
+        "pinned value-storage dtype unknown, on a method with no quantised "
+        "path, or not executable on this backend",
+    ),
+    "sched.value_dtype_mismatch": (
+        "error",
+        "plan's pinned value dtype disagrees with the already-quantised "
+        "bound bank; the engine silently runs dense",
     ),
 }
 
@@ -130,6 +152,95 @@ def _halo_check(
     return out
 
 
+def check_value_dtype(
+    entry: Any,
+    *,
+    backend: str,
+    bank_dtype: Optional[str] = None,
+    net: Optional[str] = None,
+    layer: Optional[str] = None,
+    location: Optional[str] = None,
+) -> List[Diagnostic]:
+    """Value-dtype policy for one pallas/bsr plan entry.
+
+    ``sched.value_dtype``: the pinned dtype is unknown, or the backend the
+    entry is keyed for cannot execute it (``allowed_value_dtypes`` — the
+    planner's own candidate table, so planner and verifier can never
+    disagree about what is runnable).  ``sched.value_dtype_mismatch``: the
+    bound bank is already quantised at a *different* dtype than the plan
+    pins (``bank_dtype``, when the caller has params in hand) — the exact
+    configuration the engine refuses with the ``value_dtype_mismatch``
+    runtime fallback.  A f32 bank under a narrow plan is healthy (the
+    engine quantises in-trace) and reports nothing.
+    """
+    out: List[Diagnostic] = []
+    vdt = getattr(entry, "value_dtype", None)
+    if vdt is None:
+        vdt = "float32"
+    if vdt not in VALUE_DTYPES:
+        out.append(
+            Diagnostic(
+                rule="sched.value_dtype",
+                severity="error",
+                message=(
+                    f"plan pins unknown value dtype {vdt!r}; one of "
+                    f"{VALUE_DTYPES}"
+                ),
+                net=net,
+                layer=layer,
+                location=location,
+            )
+        )
+        return out
+    allowed = allowed_value_dtypes(backend)
+    if vdt not in allowed:
+        out.append(
+            Diagnostic(
+                rule="sched.value_dtype",
+                severity="error",
+                message=(
+                    f"plan pins value dtype {vdt!r} but backend "
+                    f"{backend!r} only executes {allowed}; dispatch would "
+                    f"run a value stream the hardware cannot stream"
+                ),
+                net=net,
+                layer=layer,
+                location=location,
+            )
+        )
+        return out
+    if (
+        bank_dtype is not None
+        and bank_dtype != "float32"
+        and bank_dtype != vdt
+    ):
+        out.append(
+            Diagnostic(
+                rule="sched.value_dtype_mismatch",
+                severity="error",
+                message=(
+                    f"plan pins value dtype {vdt!r} but the bound bank is "
+                    f"already quantised as {bank_dtype!r}; the engine falls "
+                    f"back to dense (value_dtype_mismatch) rather than "
+                    f"silently re-coding the bank"
+                ),
+                net=net,
+                layer=layer,
+                location=location,
+            )
+        )
+    return out
+
+
+def _bank_dtype(bank: Any) -> Optional[str]:
+    """The value-storage dtype of a bound bank (None without one)."""
+    if bank is None:
+        return None
+    if getattr(bank, "scale", None) is None:
+        return "float32"
+    return bank.value_dtype
+
+
 def check_pallas_entry(
     op: ConvOp,
     entry: Any,
@@ -137,11 +248,22 @@ def check_pallas_entry(
     net: Optional[str] = None,
     batch: int = 1,
     dtype: str = "float32",
+    backend: str = "cpu",
     params: Optional[Dict[str, Any]] = None,
 ) -> List[Diagnostic]:
     """Verify one plan entry pinning ``method="pallas"`` dispatches to the
     Pallas kernel (not the silent csr-direct fallback)."""
     out: List[Diagnostic] = []
+    bank = None
+    if params is not None:
+        pentry = params.get(op.name) or {}
+        bank = pentry.get("ell_auto") or pentry.get("ell")
+    out += check_value_dtype(
+        entry, backend=backend, bank_dtype=_bank_dtype(bank), net=net,
+        layer=op.name)
+    if out:
+        return out
+    vdt = getattr(entry, "value_dtype", "float32") or "float32"
     k = _ell_k(op, entry.pad_to, params, batch, dtype)
     fuse_res = bool(entry.fuse) and op.res is not None
     sched, reason = resolve_schedule(
@@ -158,6 +280,7 @@ def check_pallas_entry(
         tf=entry.tf,
         fuse_res=fuse_res,
         pipeline=entry.pipeline,
+        value_dtype=vdt,
     )
     if sched is None:
         out.append(
@@ -201,10 +324,29 @@ def check_bsr_entry(
     net: Optional[str] = None,
     batch: int = 1,
     dtype: str = "float32",
+    backend: str = "cpu",
+    params: Optional[Dict[str, Any]] = None,
 ) -> List[Diagnostic]:
     """Verify one plan entry pinning ``method="bsr"`` dispatches to the MXU
     kernel (not the silent dense fallback)."""
     out: List[Diagnostic] = []
+    bank = None
+    if params is not None:
+        pentry = params.get(op.name) or {}
+        bank = pentry.get("bcsr_auto")
+        if bank is not None and entry.block_m is not None and bank.block != (
+            entry.block_m,
+            entry.block_n,
+        ):
+            # Block mismatch: the engine rebuilds an f32 bank from the
+            # dense weights, so the prebuilt bank's dtype is irrelevant.
+            bank = None
+    out += check_value_dtype(
+        entry, backend=backend, bank_dtype=_bank_dtype(bank), net=net,
+        layer=op.name)
+    if out:
+        return out
+    vdt = getattr(entry, "value_dtype", "float32") or "float32"
     if entry.block_m is None or entry.block_n is None:
         # Stale pre-v5 entry: the engine runs dense with
         # engine_reason="stale_plan_no_block".
@@ -240,6 +382,7 @@ def check_bsr_entry(
         te=entry.te,
         tf=entry.tf,
         fuse_res=fuse_res,
+        value_dtype=vdt,
     )
     if sched is None:
         out.append(
@@ -328,6 +471,7 @@ def check_network(
     net: Optional[str] = None,
     batch: int = 1,
     dtype: str = "float32",
+    backend: str = "cpu",
     params: Optional[Dict[str, Any]] = None,
 ) -> List[Diagnostic]:
     """Schedule-verify every conv op of a lowered program.
@@ -367,10 +511,13 @@ def check_network(
                 net=net,
                 batch=batch,
                 dtype=dtype,
+                backend=backend,
                 params=params,
             )
         elif entry.method == "bsr":
-            out += check_bsr_entry(op, entry, net=net, batch=batch, dtype=dtype)
+            out += check_bsr_entry(op, entry, net=net, batch=batch,
+                                   dtype=dtype, backend=backend,
+                                   params=params)
         elif entry.tm is not None and (entry.tm < 1 or op.m % entry.tm):
             # Non-Pallas methods ignore tm at execution time, but a
             # nondividing tm in the entry signals a stale/mis-keyed plan.

@@ -5,8 +5,9 @@ from repro.core.pruning import (block_prune, block_prune_conv,
 from repro.core.sparse_format import (
     BcsrConv, BcsrMatrix, EllConv, EllMatrix, balance_ell_conv,
     bcsr_conv_from_dense, bcsr_conv_to_dense, bcsr_from_dense,
-    bcsr_to_dense, csr_arrays_from_dense, ell_from_dense, ell_from_dense_conv,
-    ell_to_dense, inverse_permutation, stretch_offsets)
+    bcsr_to_dense, csr_arrays_from_dense, dequantize, ell_from_dense,
+    ell_from_dense_conv, ell_to_dense, inverse_permutation,
+    quantize_values, QUANT_DTYPES, stretch_offsets)
 from repro.core.direct_conv import dense_conv, direct_sparse_conv, out_spatial
 from repro.core.sparse_linear import bcsr_matmul, dense_matmul, ell_matmul
 from repro.core.lowering import im2col, lowered_dense_conv, lowered_sparse_conv
@@ -18,8 +19,9 @@ __all__ = [
     "BcsrConv", "BcsrMatrix", "EllConv", "EllMatrix", "balance_ell_conv",
     "bcsr_conv_from_dense", "bcsr_conv_to_dense",
     "bcsr_from_dense", "bcsr_to_dense", "csr_arrays_from_dense",
-    "ell_from_dense", "ell_from_dense_conv", "ell_to_dense",
-    "inverse_permutation", "stretch_offsets",
+    "dequantize", "ell_from_dense", "ell_from_dense_conv", "ell_to_dense",
+    "inverse_permutation", "quantize_values", "QUANT_DTYPES",
+    "stretch_offsets",
     "dense_conv", "direct_sparse_conv", "out_spatial",
     "bcsr_matmul", "dense_matmul", "ell_matmul",
     "im2col", "lowered_dense_conv", "lowered_sparse_conv",

@@ -19,6 +19,13 @@ Three formats:
 Conversion happens once at model-load time on the host (numpy), exactly like
 the paper's one-shot CSR construction + weight stretching; the jit-side
 consumers only ever see fixed-shape arrays.
+
+The conv formats (``EllConv``/``BcsrConv``) additionally support *quantised
+value streams* (:func:`quantize_values` / :func:`dequantize`): the nonzero
+values stored int8 or fp8 (``float8_e4m3fn``) with one f32 symmetric scale
+per output channel, so the dominant HBM traffic of the sparse kernels
+shrinks 4x while accumulation stays f32.  See the helper docstrings for the
+round-trip error bounds.
 """
 from __future__ import annotations
 
@@ -55,6 +62,11 @@ class EllConv:
                               apply the inverse permutation to the output and
                               the forward permutation to bias/residual, so the
                               reordering is invisible outside the kernel.
+    scale:  optional (M,) f32 -- per-output-channel symmetric dequantisation
+                              scale of a *quantised* bank
+                              (:func:`quantize_values`): the semantic weight
+                              is ``value[m, j] * scale[m]`` in f32.  None for
+                              banks whose values are stored at full width.
     """
 
     value: jax.Array
@@ -65,19 +77,26 @@ class EllConv:
     nnz: jax.Array
     shape: Tuple[int, int, int, int]
     perm: Optional[jax.Array] = None
+    scale: Optional[jax.Array] = None
 
     @property
     def k(self) -> int:
         return int(self.value.shape[1])
 
+    @property
+    def value_dtype(self) -> str:
+        """Canonical storage dtype name of the value stream (e.g. "float32",
+        "int8", "float8_e4m3fn")."""
+        return jnp.dtype(self.value.dtype).name
+
     def tree_flatten(self):
         return (self.value, self.cidx, self.ridx, self.sidx, self.offset,
-                self.nnz, self.perm), self.shape
+                self.nnz, self.perm, self.scale), self.shape
 
     @classmethod
     def tree_unflatten(cls, shape, leaves):
-        value, cidx, ridx, sidx, offset, nnz, perm = leaves
-        return cls(value, cidx, ridx, sidx, offset, nnz, shape, perm)
+        value, cidx, ridx, sidx, offset, nnz, perm, scale = leaves
+        return cls(value, cidx, ridx, sidx, offset, nnz, shape, perm, scale)
 
 
 jax.tree_util.register_pytree_node(
@@ -159,7 +178,8 @@ def balance_ell_conv(ell: EllConv) -> EllConv:
     return EllConv(
         value=take(ell.value), cidx=take(ell.cidx), ridx=take(ell.ridx),
         sidx=take(ell.sidx), offset=take(ell.offset), nnz=take(ell.nnz),
-        shape=ell.shape, perm=perm)
+        shape=ell.shape, perm=perm,
+        scale=take(ell.scale) if ell.scale is not None else None)
 
 
 def inverse_permutation(perm: jax.Array) -> jax.Array:
@@ -353,6 +373,12 @@ class BcsrConv:
     blockcol: (gbm, KB) int32   -- block-column id of each tile (0 = padding)
     nblocks:  (gbm,) int32      -- true tiles per block-row
     shape:    original (M, C, R, S); block: (bm, bn)
+    scale:    optional (gbm, bm) f32 -- per-output-channel symmetric
+              dequantisation scales of a *quantised* bank
+              (:func:`quantize_values`), laid out by (block-row, local row)
+              so the kernel can block it like the bias; rows past M (the
+              channel padding) carry scale 1 and all-zero values (inert).
+              None for banks whose tiles are stored at full width.
     """
 
     blocks: jax.Array
@@ -360,6 +386,7 @@ class BcsrConv:
     nblocks: jax.Array
     shape: Tuple[int, int, int, int]
     block: Tuple[int, int]
+    scale: Optional[jax.Array] = None
 
     @property
     def kb(self) -> int:
@@ -369,13 +396,22 @@ class BcsrConv:
     def gbm(self) -> int:
         return int(self.blocks.shape[0])
 
+    @property
+    def value_dtype(self) -> str:
+        """Canonical storage dtype name of the tile data (e.g. "float32",
+        "int8", "float8_e4m3fn")."""
+        return jnp.dtype(self.blocks.dtype).name
+
     def tree_flatten(self):
-        return (self.blocks, self.blockcol, self.nblocks), (self.shape, self.block)
+        return ((self.blocks, self.blockcol, self.nblocks, self.scale),
+                (self.shape, self.block))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         shape, block = aux
-        return cls(*leaves, shape=shape, block=block)
+        blocks, blockcol, nblocks, scale = leaves
+        return cls(blocks, blockcol, nblocks, shape=shape, block=block,
+                   scale=scale)
 
 
 jax.tree_util.register_pytree_node(
@@ -403,11 +439,114 @@ def bcsr_conv_from_dense(w, block: Tuple[int, int] = (8, 128),
 
 
 def bcsr_conv_to_dense(b: BcsrConv) -> jax.Array:
-    """Inverse of ``bcsr_conv_from_dense`` (round-trip / parity oracle)."""
+    """Inverse of ``bcsr_conv_from_dense`` (round-trip / parity oracle).
+
+    A quantised bank reconstructs its *semantic* (dequantised f32) weights —
+    dense reconstruction is how the oracles and fallbacks consume the bank.
+    """
+    if b.scale is not None:
+        b = dequantize(b)
     m, c, r, s = b.shape
     flat = BcsrMatrix(blocks=b.blocks, blockcol=b.blockcol,
                       nblocks=b.nblocks, shape=(m, c * r * s), block=b.block)
     return bcsr_to_dense(flat).reshape(m, c, r, s)
+
+
+# ---------------------------------------------------------------------------
+# Quantised value streams (int8 / fp8 banks with per-channel f32 scales)
+# ---------------------------------------------------------------------------
+
+# Largest magnitude each narrow storage dtype can carry: int8 keeps the
+# symmetric [-127, 127] range (never -128, so negation round-trips), fp8
+# e4m3fn's max finite value is 448 (the format has no inf; casts saturate).
+QUANT_DTYPES = {"int8": 127.0, "float8_e4m3fn": 448.0}
+
+
+def _quant_scales(absmax: jax.Array, qmax: float) -> jax.Array:
+    """Per-channel symmetric scale mapping |w| <= absmax onto [-qmax, qmax].
+    All-zero channels get scale 1 so they quantise — and dequantise — to
+    exact zeros instead of dividing by zero."""
+    absmax = absmax.astype(jnp.float32)
+    return jnp.where(absmax > 0, absmax / qmax, 1.0)
+
+
+def _storage_dtype(value_dtype: str):
+    if value_dtype not in QUANT_DTYPES:
+        raise ValueError(
+            f"unsupported quantised value dtype {value_dtype!r}; "
+            f"expected one of {sorted(QUANT_DTYPES)}")
+    return jnp.dtype(value_dtype)
+
+
+def _quantize_array(w: jax.Array, scale: jax.Array, value_dtype: str):
+    """Quantise ``w`` (already broadcast-divided by ``scale``) to storage."""
+    q = w.astype(jnp.float32) / scale
+    if value_dtype == "int8":
+        return jnp.clip(jnp.rint(q), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.dtype(value_dtype))
+
+
+def quantize_values(fmt, value_dtype: str = "int8"):
+    """Quantise a conv bank's value stream to ``int8`` or ``float8_e4m3fn``.
+
+    Per-output-channel *symmetric* quantisation: channel m's scale is
+    ``absmax_m / 127`` (int8) or ``absmax_m / 448`` (fp8), values are stored
+    narrow and the f32 scales ride in ``.scale``; the semantic weight is
+    ``value * scale`` (for ``BcsrConv``, tile row ``i`` of block-row ``mt``
+    uses ``scale[mt, i]``).  The padding entries of either format are zero
+    and stay zero.  Quantising an already-quantised bank raises.
+
+    Round-trip error bounds (``dequantize(quantize_values(b)) - b``), per
+    channel with scale ``s`` and original weight ``w``:
+
+    * int8 -- round-to-nearest on ``w / s`` in [-127, 127], so
+      ``|err| <= s / 2`` (= ``absmax / 254``) elementwise.
+    * float8_e4m3fn -- 3 mantissa bits round-to-nearest: relative error
+      ``<= 2**-4`` for normal quotients, absolute error ``<= s * 2**-10``
+      below the subnormal threshold; combined
+      ``|err| <= max(|w| * 2**-4, s * 2**-10)`` (up to f32 rounding of the
+      ``w / s`` quotient itself).
+
+    ``test_sparse_formats.py`` property-checks both bounds.
+    """
+    _storage_dtype(value_dtype)
+    qmax = QUANT_DTYPES[value_dtype]
+    if isinstance(fmt, EllConv):
+        if fmt.scale is not None:
+            raise ValueError("bank is already quantised")
+        scale = _quant_scales(jnp.abs(fmt.value).max(axis=1), qmax)
+        value = _quantize_array(fmt.value, scale[:, None], value_dtype)
+        return dataclasses.replace(fmt, value=value, scale=scale)
+    if isinstance(fmt, BcsrConv):
+        if fmt.scale is not None:
+            raise ValueError("bank is already quantised")
+        # (gbm, KB, bm, bn) -> per-(block-row, local-row) channel absmax
+        scale = _quant_scales(jnp.abs(fmt.blocks).max(axis=(1, 3)), qmax)
+        blocks = _quantize_array(
+            fmt.blocks, scale[:, None, :, None], value_dtype)
+        return dataclasses.replace(fmt, blocks=blocks, scale=scale)
+    raise TypeError(f"quantize_values expects EllConv or BcsrConv, "
+                    f"got {type(fmt).__name__}")
+
+
+def dequantize(fmt):
+    """Rebuild the f32 value stream of a quantised bank (``value * scale``).
+    Unquantised banks pass through unchanged.  The multiply matches the
+    kernels' in-register dequantisation exactly — same operands, same f32
+    op — so the ELL kernel run on a quantised bank is bit-identical to the
+    f32 kernel run on the dequantised bank."""
+    if isinstance(fmt, EllConv):
+        if fmt.scale is None:
+            return fmt
+        value = fmt.value.astype(jnp.float32) * fmt.scale[:, None]
+        return dataclasses.replace(fmt, value=value, scale=None)
+    if isinstance(fmt, BcsrConv):
+        if fmt.scale is None:
+            return fmt
+        blocks = fmt.blocks.astype(jnp.float32) * fmt.scale[:, None, :, None]
+        return dataclasses.replace(fmt, blocks=blocks, scale=None)
+    raise TypeError(f"dequantize expects EllConv or BcsrConv, "
+                    f"got {type(fmt).__name__}")
 
 
 def csr_arrays_from_dense(w) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:

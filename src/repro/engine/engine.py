@@ -30,7 +30,8 @@ from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.pruning import magnitude_prune
 from repro.core.sparse_format import (balance_ell_conv, bcsr_conv_from_dense,
-                                      ell_from_dense, ell_from_dense_conv)
+                                      ell_from_dense, ell_from_dense_conv,
+                                      quantize_values)
 from repro.engine.program import (ConcatOp, ConvOp, FCOp, PoolOp, Program,
                                   ReluOp, ResidualAddOp)
 from repro.kernels.bsr_conv.ops import bsr_conv, resolve_bsr_schedule
@@ -67,7 +68,10 @@ class _Decision:
     permute: bool
     fuse: bool
     block: Optional[Tuple[int, int]]
-    engine_reason: Optional[str]  # engine-level fallback (stale bsr plan)
+    value_dtype: str              # value-storage dtype the kernel streams
+    quantize_in_trace: bool       # f32 bank, narrow plan: quantise in-trace
+    engine_reason: Optional[str]  # engine-level fallback (stale bsr plan,
+                                  # value-dtype mismatch)
     provenance: str
 
 
@@ -231,10 +235,43 @@ class CnnEngine:
                         block = (pe.block_m, pe.block_n)
         method_planned = pe.method if (auto and pe is not None) else (
             "dense" if auto else method)
+        value_dtype = "float32"
+        quantize_in_trace = False
+        if auto and pe is not None and method in ("pallas", "bsr"):
+            # Value-dtype resolution: what the plan pinned vs what the bound
+            # bank stores.  Match -> run the bank as-is.  f32 bank + narrow
+            # plan (apply_plan_to_params not run) -> quantise in-trace, the
+            # same per-channel symmetric construction it would have built
+            # host-side.  Any other mismatch — a migrated (f32) entry
+            # against an already-quantised bank, or two different narrow
+            # dtypes — is a stale plan: the entry was scored for a value
+            # stream the params no longer carry, so fall back to dense and
+            # say so rather than silently dequantising.
+            want = pe.value_dtype
+            entry = self.params.get(op.name, {})
+            if method == "pallas":
+                bank = entry.get("ell_auto", entry.get("ell"))
+            else:
+                bank = entry.get("bcsr_auto")
+                if bank is not None and not (block is None
+                                             or bank.block == block):
+                    bank = None  # _bcsr_for rebuilds f32 from dense weights
+            have = ("float32" if bank is None or bank.scale is None
+                    else bank.value_dtype)
+            if want == have:
+                value_dtype = want
+            elif have == "float32":
+                value_dtype = want
+                quantize_in_trace = True
+            else:
+                method = "dense"
+                engine_reason = "value_dtype_mismatch"
         return _Decision(auto=auto, pe=pe, method=method,
                          method_planned=method_planned, tm=tm, te=te, tf=tf,
                          pipeline=pipeline, permute=permute, fuse=fuse,
-                         block=block, engine_reason=engine_reason,
+                         block=block, value_dtype=value_dtype,
+                         quantize_in_trace=quantize_in_trace,
+                         engine_reason=engine_reason,
                          provenance=provenance)
 
     def _bcsr_for(self, op: ConvOp, entry: Dict[str, Any], block):
@@ -271,6 +308,13 @@ class CnnEngine:
                 # natural-order one (apply_plan_to_params not run): balance
                 # in-trace — pure gathers, jit-safe.
                 ell = balance_ell_conv(ell)
+            if (d.quantize_in_trace and method == "pallas"
+                    and ell is not None):
+                # Plan pinned a narrow value dtype but the params carry the
+                # f32 bank (apply_plan_to_params not run): quantise
+                # in-trace — pure jnp, jit-safe, identical to the
+                # host-side construction.
+                ell = quantize_values(ell, d.value_dtype)
         else:
             ell, ell2d = entry.get("ell"), entry.get("ell2d")
         if d.engine_reason is not None:
@@ -283,6 +327,8 @@ class CnnEngine:
         bcc = None
         if method == "bsr" and op.sparsity > 0:
             bcc = self._bcsr_for(op, entry, d.block)
+            if d.quantize_in_trace and bcc.scale is None:
+                bcc = quantize_values(bcc, d.value_dtype)
         b = entry["b"]
         if op.sparsity == 0 or method == "dense":
             y = dense_conv(x, entry["w"], stride=op.stride, padding=op.pad)
@@ -424,7 +470,8 @@ class CnnEngine:
             k = ell.k if ell is not None else g.k_est(pad_to or 8)
             sched, kreason = resolve_schedule(
                 op.m, op.c, op.e, op.f, k, op.k, op.k, op.stride, tm=d.tm,
-                te=d.te, tf=d.tf, fuse_res=fuse_res, pipeline=d.pipeline)
+                te=d.te, tf=d.tf, fuse_res=fuse_res, pipeline=d.pipeline,
+                value_dtype=d.value_dtype)
             if sched is None:
                 reason, executed = kreason, "csr-direct"
             else:
@@ -436,7 +483,8 @@ class CnnEngine:
             itemsize = 2 if dtype in ("bfloat16", "float16") else 4
             sched, kreason = resolve_bsr_schedule(
                 op.c, op.e, op.f, op.k, op.k, op.stride, bm, bn, gbm, kb,
-                itemsize=itemsize, te=d.te, tf=d.tf, fuse_res=fuse_res)
+                itemsize=itemsize, te=d.te, tf=d.tf, fuse_res=fuse_res,
+                value_dtype=d.value_dtype)
             if sched is None:
                 reason, executed = kreason, "dense"
             else:
@@ -444,13 +492,15 @@ class CnnEngine:
                 tiling = {"te": te, "tf": tf, "block_m": bm, "block_n": bn}
         # Attribute cost at the schedule that actually runs — a fallback op
         # is charged for its fallback path, not the method it asked for.
+        vdtype = d.value_dtype if executed in ("pallas", "bsr") else "float32"
         cand = Candidate(
             method=executed, tm=tiling.get("tm"), pad_to=pad_to,
             te=tiling.get("te"), tf=tiling.get("tf"),
             fuse=d.fuse if executed in ("pallas", "bsr") else False,
             pipeline=bool(tiling.get("pipeline", False)),
             permute=d.permute if executed == "pallas" else False,
-            block_m=tiling.get("block_m"), block_n=tiling.get("block_n"))
+            block_m=tiling.get("block_m"), block_n=tiling.get("block_n"),
+            value_dtype=vdtype)
         w = entry.get("w") if executed == "bsr" else None
         cost = candidate_cost(
             g, cand, w_dense=None if w is None else np.asarray(w))
@@ -459,7 +509,7 @@ class CnnEngine:
             method_executed=executed, provenance=d.provenance,
             plan_source=d.pe.source if d.pe is not None else "-",
             fallback_reason=reason, fuse=d.fuse, tiling=tiling,
-            sparsity=op.sparsity, **cost)
+            sparsity=op.sparsity, value_dtype=vdtype, **cost)
 
     def execution_report(self, x, method: str = "auto", *,
                          fuse: Optional[bool] = None) -> ExecutionReport:

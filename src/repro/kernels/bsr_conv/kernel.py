@@ -63,10 +63,13 @@ def _kernel(blockcol_ref, nblocks_ref,   # scalar prefetch (SMEM)
             x_ref,                       # HBM/ANY: halo-padded input
             w_ref,                       # VMEM in: (1, 1, bm, bn)
             b_ref,                       # VMEM in: (1, bm) f32 bias
-            *rest,                       # [res_ref,] out_ref, xblk, patch, sem
+            *rest,                       # [scale_ref,] [res_ref,] out_ref,
+                                         # xblk, patch, sem
             bm: int, bn: int, rs: int, s: int, c_in: int, stride: int,
             te: int, tf: int, halo_h: int, halo_w: int,
-            fuse_relu: bool, has_res: bool):
+            fuse_relu: bool, has_res: bool, quantized: bool):
+    rest = list(rest)
+    scale_ref = rest.pop(0) if quantized else None
     if has_res:
         res_ref, out_ref, xblk_ref, patch_ref, sem = rest
     else:
@@ -120,11 +123,18 @@ def _kernel(blockcol_ref, nblocks_ref,   # scalar prefetch (SMEM)
             patch_ref[jl] = win[::stride, ::stride]
         # Contract (MXU): one (bm, bn) x (bn, TE*TF) systolic pass, f32
         # accumulate into the resident output block.
-        out_ref[0] += lax.dot_general(
+        contrib = lax.dot_general(
             w_ref[0, 0].astype(jnp.float32),
             patch_ref[...].astype(jnp.float32),
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if quantized:
+            # Dequantise after the contraction: the int8/fp8 tile is
+            # contracted as-is in f32 and each output row's contribution is
+            # scaled by its per-channel f32 scale before accumulating —
+            # accumulation stays f32 throughout.
+            contrib = scale_ref[0][:, None, None] * contrib
+        out_ref[0] += contrib
 
     # Fused epilogue on the resident f32 accumulator at the last KB step:
     # one output write instead of separate bias / residual / ReLU passes.
@@ -144,7 +154,8 @@ def _kernel(blockcol_ref, nblocks_ref,   # scalar prefetch (SMEM)
                      "fuse_relu", "interpret"))
 def bsr_conv_pallas(xpad: jax.Array, blocks: jax.Array, blockcol: jax.Array,
                     nblocks: jax.Array, bias: jax.Array,
-                    residual: jax.Array | None = None, *, rs: int, s: int,
+                    residual: jax.Array | None = None,
+                    scale: jax.Array | None = None, *, rs: int, s: int,
                     e: int, f: int, stride: int = 1, te: int | None = None,
                     tf: int | None = None, fuse_relu: bool = False,
                     interpret: bool = False) -> jax.Array:
@@ -152,13 +163,18 @@ def bsr_conv_pallas(xpad: jax.Array, blocks: jax.Array, blockcol: jax.Array,
 
     Args:
       xpad:     (N, C, Hp, Wp) pre-padded input (the paper's pad_in step).
-      blocks:   (gbm, KB, bm, bn) kept weight tiles (``BcsrConv.blocks``).
+      blocks:   (gbm, KB, bm, bn) kept weight tiles (``BcsrConv.blocks``) —
+                f32, or int8/fp8 for a quantised bank (``scale`` required).
       blockcol: (gbm, KB) int32 block-column ids over the flat C*R*S axis.
       nblocks:  (gbm,) int32 true tiles per block-row.
       bias:     (gbm, bm) f32 per-channel bias, blocked like the output
                 channels (pass zeros for a bias-free conv — bitwise no-op).
       residual: optional (N, gbm*bm, E, F) shortcut accumulated before the
                 ReLU, channel-padded like the output.
+      scale:    optional (gbm, bm) f32 per-output-channel quantisation
+                scales, blocked like the bias; each weight tile's post-MXU
+                contribution is scaled by its rows' scales before the f32
+                accumulate.
       rs, s:    R*S and S of the original filter bank (column decode).
       e, f:     output spatial dims; stride applied in-kernel.
       te, tf:   output spatial tile dims (default: whole output).  Need not
@@ -186,12 +202,17 @@ def bsr_conv_pallas(xpad: jax.Array, blocks: jax.Array, blockcol: jax.Array,
                               (0, max(0, need_w - wp))))
     grid = (n, et_n, ft_n, gbm, kb_dim)
     has_res = residual is not None
+    quantized = scale is not None
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.ANY),
         pl.BlockSpec((1, 1, bm, bn), lambda ni, et, ft, mt, kb, *_: (mt, kb, 0, 0)),
         pl.BlockSpec((1, bm), lambda ni, et, ft, mt, kb, *_: (mt, 0)),
     ]
     inputs = [blockcol, nblocks, xpad, blocks, bias]
+    if quantized:
+        in_specs.append(pl.BlockSpec(
+            (1, bm), lambda ni, et, ft, mt, kb, *_: (mt, 0)))
+        inputs.append(scale)
     if has_res:
         in_specs.append(pl.BlockSpec(
             (1, bm, te, tf), lambda ni, et, ft, mt, kb, *_: (ni, mt, et, ft)))
@@ -199,7 +220,8 @@ def bsr_conv_pallas(xpad: jax.Array, blocks: jax.Array, blockcol: jax.Array,
     return pl.pallas_call(
         functools.partial(_kernel, bm=bm, bn=bn, rs=rs, s=s, c_in=c,
                           stride=stride, te=te, tf=tf, halo_h=halo_h,
-                          halo_w=halo_w, fuse_relu=fuse_relu, has_res=has_res),
+                          halo_w=halo_w, fuse_relu=fuse_relu, has_res=has_res,
+                          quantized=quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core.direct_conv import out_spatial
 from repro.core.sparse_format import BcsrConv, bcsr_conv_to_dense
 from repro.kernels import budget
-from repro.kernels.budget import SMEM_BUDGET, VMEM_BUDGET, halo_extent
+from repro.kernels.budget import (SMEM_BUDGET, VMEM_BUDGET, halo_extent,
+                                  value_itemsize)
 from repro.kernels.bsr_conv.kernel import bsr_conv_pallas
 from repro.kernels.bsr_conv.ref import bsr_conv_ref
 from repro.kernels.sparse_conv.ops import apply_epilogue, spatial_candidates
@@ -46,19 +47,27 @@ def bsr_smem_fits(gbm: int, kb: int) -> bool:
 
 def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
                     te: int, tf: int, itemsize: int = 4,
-                    fuse_res: bool = False) -> bool:
+                    fuse_res: bool = False,
+                    value_itemsize: Optional[int] = None,
+                    quantized: bool = False) -> bool:
     """Whether one (te, tf) spatial tiling's working set — halo'd input
     block + (bm, bn) weight tile + (bn, te, tf) patch tile + f32 out tile
-    (+ the residual input tile when fused) — fits the VMEM budget
-    (``repro.kernels.budget`` arithmetic, this module's budget alias)."""
+    (+ the residual input tile when fused, + the (1, bm) f32 scale tile for
+    a quantised bank) — fits the VMEM budget (``repro.kernels.budget``
+    arithmetic, this module's budget alias).  ``value_itemsize`` prices the
+    weight tile at its storage width (defaults to the input itemsize)."""
     return budget.bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
                                   itemsize=itemsize, fuse_res=fuse_res,
+                                  value_itemsize=value_itemsize,
+                                  quantized=quantized,
                                   vmem_budget=VMEM_BUDGET)
 
 
 def bsr_tile_candidates(c: int, e: int, f: int, r: int, s: int, stride: int,
                         bm: int, bn: int, itemsize: int = 4,
-                        fuse_res: bool = False) -> List[Tuple[int, int]]:
+                        fuse_res: bool = False,
+                        value_itemsize: Optional[int] = None,
+                        quantized: bool = False) -> List[Tuple[int, int]]:
     """All (te, tf) spatial tilings whose VMEM working set fits, preferred
     first: fewest spatial cells (least halo re-fetch and least per-cell
     patch re-gather), then least total staged input traffic."""
@@ -66,7 +75,9 @@ def bsr_tile_candidates(c: int, e: int, f: int, r: int, s: int, stride: int,
     for te in spatial_candidates(e):
         for tf in spatial_candidates(f):
             if bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
-                               itemsize=itemsize, fuse_res=fuse_res):
+                               itemsize=itemsize, fuse_res=fuse_res,
+                               value_itemsize=value_itemsize,
+                               quantized=quantized):
                 out.append((te, tf))
 
     def pref(cand: Tuple[int, int]) -> Tuple[int, int]:
@@ -82,6 +93,7 @@ def resolve_bsr_schedule(c: int, e: int, f: int, r: int, s: int, stride: int,
                          bm: int, bn: int, gbm: int, kb: int, *,
                          itemsize: int = 4, te: Optional[int] = None,
                          tf: Optional[int] = None, fuse_res: bool = False,
+                         value_dtype: str = "float32",
                          ) -> Tuple[Optional[Tuple[int, int]],
                                     Optional[str]]:
     """The dispatch decision ``bsr_conv`` makes, as a pure function.
@@ -91,7 +103,14 @@ def resolve_bsr_schedule(c: int, e: int, f: int, r: int, s: int, stride: int,
     code — when the layer falls back to the dense-reconstruction conv.
     The engine's ExecutionReport and the benchmark's zero-fallback
     invariant probe dispatch through this; ``bsr_conv`` runs it too.
+
+    ``value_dtype`` names the bank's storage dtype: a quantised bank
+    (int8 / float8_e4m3fn) shrinks the VMEM weight tile to one byte per
+    element but streams an extra (1, bm) f32 scale tile — both accounted
+    here so feasibility matches what the kernel would allocate.
     """
+    vsize = value_itemsize(value_dtype)
+    quantized = vsize == 1
     if not bsr_smem_fits(gbm, kb):
         return None, "smem_infeasible"
     if te is not None and tf is not None:
@@ -99,11 +118,14 @@ def resolve_bsr_schedule(c: int, e: int, f: int, r: int, s: int, stride: int,
         # when it fits, never launch an over-budget kernel.
         te, tf = min(te, e), min(tf, f)
         if not bsr_tiling_fits(c, r, s, stride, bm, bn, te, tf,
-                               itemsize=itemsize, fuse_res=fuse_res):
+                               itemsize=itemsize, fuse_res=fuse_res,
+                               value_itemsize=vsize, quantized=quantized):
             return None, "no_feasible_tiling"
     else:
         cands = bsr_tile_candidates(c, e, f, r, s, stride, bm, bn,
-                                    itemsize=itemsize, fuse_res=fuse_res)
+                                    itemsize=itemsize, fuse_res=fuse_res,
+                                    value_itemsize=vsize,
+                                    quantized=quantized)
         if te is not None:
             cands = [t for t in cands if t[0] == min(te, e)]
         if tf is not None:
@@ -152,7 +174,8 @@ def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
 
     sched, reason = resolve_bsr_schedule(c, e, f, r, s, stride, bm, bn,
                                          gbm, kb_dim, itemsize=itemsize,
-                                         te=te, tf=tf, fuse_res=fuse_res)
+                                         te=te, tf=tf, fuse_res=fuse_res,
+                                         value_dtype=bc.value_dtype)
     if sched is None:
         return fallback(reason)
     te, tf = sched
@@ -167,7 +190,7 @@ def bsr_conv(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
     if res is not None and mpad != m:
         res = jnp.pad(res, ((0, 0), (0, mpad - m), (0, 0), (0, 0)))
     out = bsr_conv_pallas(
-        xpad, bc.blocks, bc.blockcol, bc.nblocks, b, res,
+        xpad, bc.blocks, bc.blockcol, bc.nblocks, b, res, scale=bc.scale,
         rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
         fuse_relu=fuse_relu, interpret=interpret)
     return out[:, :m].astype(x.dtype)

@@ -32,6 +32,14 @@ from jax import lax
 from repro.core.sparse_format import BcsrConv, bcsr_conv_to_dense
 
 
+@jax.jit
+def _scaled_accum(acc: jax.Array, scale_row: jax.Array,
+                  contrib: jax.Array) -> jax.Array:
+    """One compiled ``acc + scale * contrib`` step, matching the kernel's
+    fused multiply-add rounding (see ``bsr_conv_blocked_ref``)."""
+    return acc + scale_row[None, :, None, None] * contrib
+
+
 def bsr_conv_ref(x: jax.Array, w_dense: jax.Array, *, stride: int = 1,
                  padding: int = 0) -> jax.Array:
     """(N, C, H, W) x (M, C, R, S) -> (N, M, E, F), float32 accumulate."""
@@ -54,6 +62,16 @@ def bsr_conv_blocked_ref(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
     numpy — this is an oracle, not a jit path); the per-block math is the
     kernel's exact op sequence.  Returns (N, M, E, F) float32 in natural
     channel order (the gbm*bm channel padding already sliced off).
+
+    A quantised bank (``bc.scale`` set) mirrors the kernel's in-kernel
+    dequantisation exactly: the int8/fp8 tile is contracted as-is in f32
+    and each block's contribution is scaled by the per-channel f32 scales
+    *before* the accumulate — the same op order as the kernel, so the
+    parity grid's bit-identity anchor holds for quantised banks too.  The
+    scaled accumulate runs inside one jitted chain (``_scaled_accum``): the
+    kernel body is compiled as a whole, so XLA contracts its
+    ``acc + scale * contrib`` into a fused multiply-add; op-by-op eager
+    execution would round the multiply separately and drift by ~1 ulp.
     """
     n, c, h, w = x.shape
     m, cw, r, s = bc.shape
@@ -85,11 +103,15 @@ def bsr_conv_blocked_ref(x: jax.Array, bc: BcsrConv, *, stride: int = 1,
         for kb in range(int(nblocks[mt])):
             patch = patch_tile(int(blockcol[mt, kb]) * bn)
             w_tile = bc.blocks[mt, kb].astype(jnp.float32)
-            acc = acc + jax.vmap(
+            contrib = jax.vmap(
                 lambda p, wt=w_tile: lax.dot_general(
                     wt, p.astype(jnp.float32),
                     dimension_numbers=(((1,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32))(patch)
+            if bc.scale is not None:
+                acc = _scaled_accum(acc, bc.scale[mt], contrib)
+            else:
+                acc = acc + contrib
         if bias is not None:
             b = jnp.asarray(bias, jnp.float32)
             b = jnp.pad(b, (0, gbm * bm - b.shape[0]))

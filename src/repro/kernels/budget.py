@@ -32,48 +32,78 @@ def halo_extent(t: int, stride: int, r: int) -> int:
     return (t - 1) * stride + r
 
 
+# Storage width (bytes) of each supported sparse-value dtype.  The quantised
+# dtypes (int8 / fp8) store one byte per nonzero plus a per-output-channel
+# f32 scale row accounted separately (SMEM for ELL, VMEM for BCSR).
+VALUE_ITEMSIZES = {
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "int8": 1,
+    "float8_e4m3fn": 1,
+}
+
+
+def value_itemsize(dtype: str) -> int:
+    """Bytes per stored sparse value for ``dtype`` (a dtype name string)."""
+    try:
+        return VALUE_ITEMSIZES[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown sparse value dtype {dtype!r}; expected one of "
+            f"{sorted(VALUE_ITEMSIZES)}") from None
+
+
 # -- ELL direct sparse conv (kernels/sparse_conv) ---------------------------
 
-def ell_smem_bytes(m: int, k: int) -> int:
+def ell_smem_bytes(m: int, k: int, quantized: bool = False) -> int:
     """SMEM footprint of the ELL kernel's scalar-prefetched operands:
     packed indices (M*K int32), the int32 nnz row (M*4 — the kernel's
-    per-row loop bounds), and the f32 bias row (M*4)."""
-    return m * k * 4 + m * 4 + m * 4
+    per-row loop bounds), and the f32 bias row (M*4).  A quantised bank
+    scalar-prefetches a fourth operand, the f32 per-channel scale row
+    (M*4)."""
+    return m * k * 4 + m * 4 + m * 4 + (m * 4 if quantized else 0)
 
 
-def smem_fits(m: int, k: int, *, smem_budget: int = None) -> bool:
-    """All three scalar-prefetched operands fit the SMEM budget; omitting
+def smem_fits(m: int, k: int, quantized: bool = False, *,
+              smem_budget: int = None) -> bool:
+    """All scalar-prefetched operands fit the SMEM budget; omitting
     the nnz row used to let index-heavy layers overshoot."""
     budget = SMEM_BUDGET if smem_budget is None else smem_budget
-    return ell_smem_bytes(m, k) <= budget
+    return ell_smem_bytes(m, k, quantized) <= budget
 
 
 def ell_vmem_bytes(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                    stride: int, tm: int, te: int, tf: int,
-                   fuse_res: bool = False, pipeline: bool = False) -> int:
+                   fuse_res: bool = False, pipeline: bool = False,
+                   value_itemsize: int = 4) -> int:
     """VMEM working set of one ELL (tm, te, tf) tiling: halo'd input block
     + value block + f32 out tile (+ the residual input tile when the fused
     epilogue accumulates a shortcut).  ``pipeline=True`` accounts the
     double-buffered halo DMA schedule: two halo-block scratch buffers are
-    live at once, so the staged-input term doubles."""
+    live at once, so the staged-input term doubles.  ``value_itemsize``
+    prices the (tm, K) value block at its storage width — 4 for f32 banks,
+    1 for int8/fp8 quantised ones (the scale row lives in SMEM, see
+    :func:`ell_smem_bytes`)."""
     x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * 4
     if pipeline:
         x_bytes *= 2
     out_bytes = tm * te * tf * 4
     res_bytes = out_bytes if fuse_res else 0
-    return x_bytes + tm * k * 4 + out_bytes + res_bytes
+    return x_bytes + tm * k * value_itemsize + out_bytes + res_bytes
 
 
 def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                 stride: int, tm: int, te: int, tf: int,
                 fuse_res: bool = False, pipeline: bool = False,
-                *, vmem_budget: int = None) -> bool:
+                *, value_itemsize: int = 4, vmem_budget: int = None) -> bool:
     """Whether one ELL (tm, te, tf) tiling's working set fits VMEM."""
     if tm < 1 or m % tm:
         return False
     budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
     return ell_vmem_bytes(m, c, e, f, k, r, s, stride, tm, te, tf,
-                          fuse_res=fuse_res, pipeline=pipeline) <= budget
+                          fuse_res=fuse_res, pipeline=pipeline,
+                          value_itemsize=value_itemsize) <= budget
 
 
 # -- BCSR MXU conv (kernels/bsr_conv) ---------------------------------------
@@ -92,23 +122,31 @@ def bsr_smem_fits(gbm: int, kb: int, *, smem_budget: int = None) -> bool:
 
 def bsr_vmem_bytes(c: int, r: int, s: int, stride: int, bm: int, bn: int,
                    te: int, tf: int, itemsize: int = 4,
-                   fuse_res: bool = False) -> int:
+                   fuse_res: bool = False,
+                   value_itemsize: int = None,
+                   quantized: bool = False) -> int:
     """VMEM working set of one BCSR (te, tf) spatial tiling: halo'd input
     block + (bm, bn) weight tile + (bn, te, tf) patch tile + f32 out tile
-    (+ the residual input tile when fused)."""
+    (+ the residual input tile when fused).  ``value_itemsize`` prices the
+    weight tile at its storage width (defaults to the input ``itemsize``);
+    a quantised bank additionally streams a (1, bm) f32 scale tile
+    (``quantized=True``)."""
     x_bytes = c * halo_extent(te, stride, r) * halo_extent(tf, stride, s) * itemsize
-    w_bytes = bm * bn * itemsize
+    w_bytes = bm * bn * (itemsize if value_itemsize is None else value_itemsize)
     patch_bytes = bn * te * tf * itemsize
     out_bytes = bm * te * tf * 4
     res_bytes = out_bytes if fuse_res else 0
-    return x_bytes + w_bytes + patch_bytes + out_bytes + res_bytes
+    scale_bytes = bm * 4 if quantized else 0
+    return x_bytes + w_bytes + patch_bytes + out_bytes + res_bytes + scale_bytes
 
 
 def bsr_tiling_fits(c: int, r: int, s: int, stride: int, bm: int, bn: int,
                     te: int, tf: int, itemsize: int = 4,
                     fuse_res: bool = False, *,
+                    value_itemsize: int = None, quantized: bool = False,
                     vmem_budget: int = None) -> bool:
     """Whether one BCSR (te, tf) spatial tiling's working set fits VMEM."""
     budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
     return bsr_vmem_bytes(c, r, s, stride, bm, bn, te, tf, itemsize=itemsize,
-                          fuse_res=fuse_res) <= budget
+                          fuse_res=fuse_res, value_itemsize=value_itemsize,
+                          quantized=quantized) <= budget

@@ -87,13 +87,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
-            x_ref,                       # HBM/ANY: halo-padded input
-            val_ref,                     # VMEM in
-            *rest,                       # [res_ref,] out_ref, scratch, sem
+def _kernel(*refs,                       # scalar prefetch (SMEM), then VMEM
             tm: int, rs: int, s: int, stride: int, te: int, tf: int,
             halo_h: int, halo_w: int, fuse_relu: bool, has_res: bool,
-            pipeline: bool, et_n: int, ft_n: int, n_cells: int):
+            quantized: bool, pipeline: bool, et_n: int, ft_n: int,
+            n_cells: int):
+    # Scalar-prefetched operands lead: packed indices, nnz row, bias row,
+    # and — for a quantised bank — the f32 per-channel scale row.  Then the
+    # HBM/ANY halo-padded input, the VMEM value block, the optional residual
+    # tile, the output tile, and the scratch buffers.
+    if quantized:
+        idx_ref, nnz_ref, bias_ref, scale_ref, x_ref, val_ref, *rest = refs
+    else:
+        scale_ref = None
+        idx_ref, nnz_ref, bias_ref, x_ref, val_ref, *rest = refs
     if has_res:
         res_ref, out_ref, xblk_ref, sem = rest
     else:
@@ -174,7 +181,14 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
             else:
                 win = xblk_ref[c, pl.ds(r, e_ext), pl.ds(ss, f_ext)]
             win = win[::stride, ::stride]
-            return acc + val_ref[ml, kk].astype(jnp.float32) * win.astype(jnp.float32)
+            v = val_ref[ml, kk].astype(jnp.float32)
+            if quantized:
+                # Dequantise at the FMA: multiply the int8/fp8 value by its
+                # row's f32 scale *before* the window product — the exact
+                # multiply ``dequantize`` performs host-side, so this kernel
+                # is bit-identical to the f32 kernel on a dequantised bank.
+                v = v * scale_ref[m]
+            return acc + v * win.astype(jnp.float32)
 
         acc0 = jnp.zeros((te, tf), dtype=jnp.float32)
         # CSR semantics: iterate only this row's true nonzeros.
@@ -198,7 +212,8 @@ def _kernel(idx_ref, nnz_ref, bias_ref,  # scalar prefetch (SMEM)
                      "fuse_relu", "pipeline", "interpret"))
 def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                        nnz: jax.Array, bias: jax.Array,
-                       residual: jax.Array | None = None, *, tm: int, k: int,
+                       residual: jax.Array | None = None,
+                       scale: jax.Array | None = None, *, tm: int, k: int,
                        rs: int, s: int, e: int, f: int, stride: int = 1,
                        te: int | None = None, tf: int | None = None,
                        fuse_relu: bool = False, pipeline: bool = False,
@@ -207,7 +222,8 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
 
     Args:
       xpad:       (N, C, Hp, Wp) pre-padded input (the paper's pad_in step).
-      value:      (M, K) ELL values.
+      value:      (M, K) ELL values — f32, or int8/fp8 for a quantised bank
+                  (``scale`` required; dequantised in-register at the FMA).
       packed_idx: (M, K) int32, c*(R*S) + r*S + s.
       nnz:        (M,) int32 true row lengths.
       bias:       (M,) f32 per-channel bias, added to the f32 accumulator
@@ -215,6 +231,10 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                   then a bitwise no-op).
       residual:   optional (N, M, E, F) shortcut accumulated before the ReLU
                   (bottleneck tail), blocked like the output tile.
+      scale:      optional (M,) f32 per-output-channel quantisation scales,
+                  scalar-prefetched as a fourth SMEM operand; each value is
+                  multiplied by its row's scale before the window product,
+                  so accumulation stays f32 throughout.
       tm:         output-channel tile (VMEM/occupancy knob); must divide M.
       e, f:       output spatial dims ((Hp - R) // stride + 1 etc.).
       stride:     conv stride (>= 1), applied in-kernel.
@@ -255,11 +275,15 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
                               (0, max(0, need_w - wp))))
     grid = (n, et_n, ft_n, m // tm)
     has_res = residual is not None
+    quantized = scale is not None
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.ANY),
         pl.BlockSpec((tm, k), lambda ni, et, ft, mt, *_: (mt, 0)),
     ]
-    inputs = [packed_idx, nnz, bias, xpad, value]
+    if quantized:
+        inputs = [packed_idx, nnz, bias, scale, xpad, value]
+    else:
+        inputs = [packed_idx, nnz, bias, xpad, value]
     if has_res:
         in_specs.append(pl.BlockSpec(
             (1, tm, te, tf), lambda ni, et, ft, mt, *_: (ni, mt, et, ft)))
@@ -274,10 +298,10 @@ def sparse_conv_pallas(xpad: jax.Array, value: jax.Array, packed_idx: jax.Array,
         functools.partial(_kernel, tm=tm, rs=rs, s=s, stride=stride,
                           te=te, tf=tf, halo_h=halo_h, halo_w=halo_w,
                           fuse_relu=fuse_relu, has_res=has_res,
-                          pipeline=pipeline, et_n=et_n, ft_n=ft_n,
-                          n_cells=n * et_n * ft_n),
+                          quantized=quantized, pipeline=pipeline,
+                          et_n=et_n, ft_n=ft_n, n_cells=n * et_n * ft_n),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4 if quantized else 3,
             grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec(

@@ -30,10 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.direct_conv import direct_sparse_conv, out_spatial
-from repro.core.sparse_format import (EllConv, ell_from_dense_conv,
+from repro.core.sparse_format import (EllConv, dequantize,
+                                      ell_from_dense_conv,
                                       inverse_permutation)
 from repro.kernels import budget
-from repro.kernels.budget import halo_extent  # noqa: F401  (re-export)
+from repro.kernels.budget import (halo_extent,  # noqa: F401  (re-export)
+                                  value_itemsize)
 from repro.kernels.sparse_conv.kernel import sparse_conv_pallas
 from repro.telemetry.fallback import record_fallback
 
@@ -53,12 +55,13 @@ _TM_LADDER = (128, 64, 32, 16, 8, 4, 2, 1)
 _SPATIAL_LADDER = (128, 64, 32, 16, 8)
 
 
-def smem_fits(m: int, k: int) -> bool:
-    """All three scalar-prefetched operands fit the SMEM budget: packed
-    indices (M*K int32), the int32 nnz row (M*4 — the kernel's per-row loop
-    bounds; omitting it used to let index-heavy layers overshoot), and the
-    f32 bias row (M*4)."""
-    return budget.smem_fits(m, k, smem_budget=_SMEM_BUDGET)
+def smem_fits(m: int, k: int, quantized: bool = False) -> bool:
+    """All scalar-prefetched operands fit the SMEM budget: packed indices
+    (M*K int32), the int32 nnz row (M*4 — the kernel's per-row loop bounds;
+    omitting it used to let index-heavy layers overshoot), the f32 bias row
+    (M*4), and — for a quantised bank — the f32 per-channel scale row
+    (another M*4)."""
+    return budget.smem_fits(m, k, quantized, smem_budget=_SMEM_BUDGET)
 
 
 def spatial_candidates(e: int) -> List[int]:
@@ -72,20 +75,22 @@ def spatial_candidates(e: int) -> List[int]:
 
 
 def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
-                  k: int) -> List[int]:
+                  k: int, value_itemsize: int = 4) -> List[int]:
     """Output-channel tiles that divide M and fit VMEM with the *whole*
     padded image staged (the untiled spatial schedule), largest first.
 
     Returns ``[]`` when even TM=1 busts the budget — callers must then tile
     spatially (``tile_candidates``) or fall back to the pure-JAX path.
     Returning ``[1]`` here used to launch an over-budget kernel.
+    ``value_itemsize`` prices the value block at its storage width (1 for
+    int8/fp8 quantised banks).
     """
     x_bytes = c * hp * wp * 4
     out: List[int] = []
     for tm in _TM_LADDER:
         if m % tm:
             continue
-        val_bytes = tm * k * 4
+        val_bytes = tm * k * value_itemsize
         out_bytes = tm * e * f * 4
         if x_bytes + val_bytes + out_bytes <= _VMEM_BUDGET:
             out.append(tm)
@@ -94,16 +99,19 @@ def tm_candidates(m: int, c: int, hp: int, wp: int, e: int, f: int,
 
 def tiling_fits(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                 stride: int, tm: int, te: int, tf: int,
-                fuse_res: bool = False, pipeline: bool = False) -> bool:
+                fuse_res: bool = False, pipeline: bool = False,
+                value_itemsize: int = 4) -> bool:
     """Whether one (tm, te, tf) tiling's working set — halo'd input block +
     value block + f32 out tile (+ the residual input tile when the fused
     epilogue accumulates a shortcut) — fits the VMEM budget.
 
     ``pipeline=True`` accounts the double-buffered halo DMA schedule: two
     halo-block scratch buffers are live at once (the one being computed on
-    and the one being prefetched), so the staged-input term doubles."""
+    and the one being prefetched), so the staged-input term doubles.
+    ``value_itemsize`` prices the value block at its storage width."""
     return budget.tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
                               fuse_res=fuse_res, pipeline=pipeline,
+                              value_itemsize=value_itemsize,
                               vmem_budget=_VMEM_BUDGET)
 
 
@@ -111,6 +119,7 @@ def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                     stride: int = 1,
                     tms: Optional[Tuple[int, ...]] = None,
                     fuse_res: bool = False, pipeline: bool = False,
+                    value_itemsize: int = 4,
                     ) -> List[Tuple[int, int, int]]:
     """All (tm, te, tf) tilings whose VMEM working set fits, preferred first.
 
@@ -120,14 +129,16 @@ def tile_candidates(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     feasible channel tile.  ``tms`` overrides the channel-tile ladder (e.g.
     a caller-pinned tm that the ladder doesn't contain); ``fuse_res``
     reserves VMEM for the fused epilogue's residual input tile; ``pipeline``
-    for the double-buffered halo schedule's second scratch block.
+    for the double-buffered halo schedule's second scratch block;
+    ``value_itemsize`` prices the value block at its storage width.
     """
     out: List[Tuple[int, int, int]] = []
     for te in spatial_candidates(e):
         for tf in spatial_candidates(f):
             for tm in (tms or _TM_LADDER):
                 if tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                               fuse_res=fuse_res, pipeline=pipeline):
+                               fuse_res=fuse_res, pipeline=pipeline,
+                               value_itemsize=value_itemsize):
                     out.append((tm, te, tf))
 
     def pref(cand: Tuple[int, int, int]) -> Tuple[int, int, int]:
@@ -193,6 +204,7 @@ def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
                      te: Optional[int] = None, tf: Optional[int] = None,
                      fuse_res: bool = False,
                      pipeline: Optional[bool] = None,
+                     value_dtype: str = "float32",
                      ) -> Tuple[Optional[Tuple[int, int, int, bool]],
                                 Optional[str]]:
     """The dispatch decision ``sparse_conv`` makes, as a pure function.
@@ -204,8 +216,15 @@ def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     zero-fallback invariant can ask "what would this layer execute?"
     without launching anything; ``sparse_conv`` itself dispatches through
     this same function.
+
+    ``value_dtype`` names the bank's storage dtype: a quantised bank
+    (int8 / float8_e4m3fn) shrinks the VMEM value block to one byte per
+    nonzero but scalar-prefetches an extra f32 scale row in SMEM — both
+    accounted here so feasibility matches what the kernel would allocate.
     """
-    if not smem_fits(m, k):
+    vsize = value_itemsize(value_dtype)
+    quantized = vsize == 1
+    if not smem_fits(m, k, quantized):
         # Index-heavy layers: packed indices cannot be scalar-prefetched.
         return None, "smem_infeasible"
     if tm is not None and te is not None and tf is not None:
@@ -215,7 +234,7 @@ def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
         if tm < 1 or m % tm:
             return None, "nondividing_tm"
         if not tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                           fuse_res=fuse_res):
+                           fuse_res=fuse_res, value_itemsize=vsize):
             return None, "no_feasible_tiling"
     else:
         # A pinned tm need not sit on the default ladder (e.g. tm=24 for
@@ -224,7 +243,7 @@ def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
             return None, "nondividing_tm"
         cands = tile_candidates(m, c, e, f, k, r, s, stride,
                                 tms=None if tm is None else (tm,),
-                                fuse_res=fuse_res)
+                                fuse_res=fuse_res, value_itemsize=vsize)
         if te is not None:
             cands = [t for t in cands if t[1] == min(te, e)]
         if tf is not None:
@@ -237,7 +256,8 @@ def resolve_schedule(m: int, c: int, e: int, f: int, k: int, r: int, s: int,
     # scratch block fits; otherwise the single-buffer blocking path.
     if pipeline is None or pipeline:
         pipeline = tiling_fits(m, c, e, f, k, r, s, stride, tm, te, tf,
-                               fuse_res=fuse_res, pipeline=True)
+                               fuse_res=fuse_res, pipeline=True,
+                               value_itemsize=vsize)
     return (tm, te, tf, bool(pipeline)), None
 
 
@@ -292,7 +312,11 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
             geometry=(f"m={m} c={c} e={e} f={f} k={k} r={r} s={s} "
                       f"stride={stride}"),
             fallback_to="csr-direct")
-        y = direct_sparse_conv(x, ell, stride=stride, padding=padding)
+        # The pure-JAX direct path multiplies values in their storage dtype;
+        # a quantised bank must be dequantised first so the fallback computes
+        # the same f32 math as the kernel's in-register scale.
+        y = direct_sparse_conv(x, dequantize(ell), stride=stride,
+                               padding=padding)
         if inv is not None:
             # The bank's rows are in balanced order; restore channel order
             # before the (caller-ordered) epilogue.
@@ -301,7 +325,8 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
 
     sched, reason = resolve_schedule(m, c, e, f, k, r, s, stride, tm=tm,
                                      te=te, tf=tf, fuse_res=fuse_res,
-                                     pipeline=pipeline)
+                                     pipeline=pipeline,
+                                     value_dtype=ell.value_dtype)
     if sched is None:
         # The XLA-scheduled direct path, with the same epilogue unfused.
         return fallback(reason)
@@ -318,6 +343,7 @@ def sparse_conv(x: jax.Array, ell: EllConv, *, stride: int = 1,
             res = jnp.take(res, ell.perm, axis=1)
     out = sparse_conv_pallas(
         xpad, ell.value, pack_indices(ell), ell.nnz, b, res,
+        scale=ell.scale,
         tm=tm, k=k, rs=r * s, s=s, e=e, f=f, stride=stride, te=te, tf=tf,
         fuse_relu=fuse_relu, pipeline=pipeline, interpret=interpret)
     if inv is not None:

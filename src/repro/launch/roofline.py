@@ -18,6 +18,16 @@ import json
 import re
 from typing import Dict, Optional
 
+# Bytes/element the roofline charges for one sparse-bank value, by storage
+# dtype name ("float32", "bfloat16", "int8", "float8_e4m3fn", ...).  Lives
+# in ``repro.kernels.budget`` (the VMEM/SMEM fit arithmetic needs the same
+# widths); re-exported here because this module is where traffic is priced:
+# a quantised value stream is charged ``n_values * value_itemsize(dtype)``
+# plus the per-output-channel f32 scale row — the byte credit that makes
+# int8 halve (and fp8 quarter) the dominant sparse-conv traffic term.
+from repro.kernels.budget import (VALUE_ITEMSIZES,  # noqa: F401
+                                  value_itemsize)
+
 PEAK_FLOPS = 197e12        # bf16 per chip (MXU systolic arrays)
 # VPU (8x128 vector unit) FMA throughput, as a coarse architectural ratio of
 # the MXU peak.  The per-nonzero FMA loops of the sparse direct/SpMM paths

@@ -14,6 +14,13 @@ Every silent-degradation branch in the execution stack reports through
   stale_plan_no_block   a plan entry claims ``method="bsr"`` but carries no
                         BCSR block shape (pre-v5 cache document) — the
                         engine runs the dense executor instead
+  value_dtype_mismatch  the plan's pinned value-storage dtype disagrees with
+                        the already-quantised bank the params carry (e.g. a
+                        migrated pre-v6 f32 entry against an int8 bank, or
+                        an int8 entry against an fp8 bank) — the engine
+                        runs the dense executor rather than silently
+                        dequantising/requantising a bank the plan was not
+                        scored against
 
 Two consumers, with different lifetimes:
 
@@ -38,6 +45,7 @@ REASONS = frozenset({
     "no_feasible_tiling",
     "nondividing_tm",
     "stale_plan_no_block",
+    "value_dtype_mismatch",
 })
 
 

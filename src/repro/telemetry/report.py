@@ -52,6 +52,7 @@ class OpReport:
     fuse: bool = False
     tiling: Dict[str, Any] = dataclasses.field(default_factory=dict)
     sparsity: float = 0.0
+    value_dtype: str = "float32"         # executed bank value-storage dtype
     flops: float = 0.0
     hbm_bytes: float = 0.0
     staging_stall_s: float = 0.0
@@ -150,6 +151,7 @@ class ExecutionReport:
                       "provenance": o.provenance,
                       "fallback": o.fallback_reason,
                       "fuse": o.fuse, "sparsity": o.sparsity,
+                      "value_dtype": o.value_dtype,
                       "flops": o.flops, "hbm_bytes": o.hbm_bytes,
                       "staging_stall_s": o.staging_stall_s})
             t += max(o.est_s, 1e-9)

@@ -9,27 +9,34 @@ models share one entry.
 
 Format (``docs/autotuning.md`` documents it for humans):
 
-    {"version": 5,
+    {"version": 6,
      "entries": {"<key>": {"method": "bsr", "te": 32, "tf": 32,
                            "block_m": 32, "block_n": 128, "fuse": true,
+                           "value_dtype": "int8",
                            "est_s": 1.2e-4, "source": "roofline"}}}
 
-Version history: v5 added the ``bsr`` method (BCSR MXU conv) and its
-``block_m``/``block_n`` tile shape; v4 added the halo DMA schedule
-``pipeline`` (double-buffered staging: cell i+1's input block copies while
-cell i computes) and ``permute`` (nnz-balanced bank with the inverse
-permutation applied to the output) to pallas entries; v3 added the ``fuse``
-flag (in-kernel epilogue: bias / ReLU / bottleneck shortcut applied to the
-f32 accumulator); v2 added the output spatial tile ``(te, tf)``.  Older
-documents load via migration — v1 entries get ``te = tf = None`` (the
-untiled schedule the v1 kernel executed), v1/v2 entries get ``fuse =
-False`` (those kernels always ran the unfused three-pass epilogue), v1-v3
-entries get ``pipeline = permute = False`` (those kernels always staged
-with a blocking single-buffer DMA over natural-order banks), and v1-v4
-entries get ``block_m = block_n = None`` (no pre-v5 kernel ran blocked) —
-and are re-persisted as v5 on the next save.  A (corrupt or hand-edited)
-pre-v5 entry claiming ``method="bsr"`` therefore migrates with no block
-shape; executors treat that as a stale plan and fall back to dense.
+Version history: v6 added ``value_dtype`` — the bank's value-storage dtype
+("float32", or the quantised "int8"/"float8_e4m3fn" with per-output-channel
+f32 scales and f32 accumulation); v5 added the ``bsr`` method (BCSR MXU
+conv) and its ``block_m``/``block_n`` tile shape; v4 added the halo DMA
+schedule ``pipeline`` (double-buffered staging: cell i+1's input block
+copies while cell i computes) and ``permute`` (nnz-balanced bank with the
+inverse permutation applied to the output) to pallas entries; v3 added the
+``fuse`` flag (in-kernel epilogue: bias / ReLU / bottleneck shortcut
+applied to the f32 accumulator); v2 added the output spatial tile
+``(te, tf)``.  Older documents load via migration — v1 entries get ``te =
+tf = None`` (the untiled schedule the v1 kernel executed), v1/v2 entries
+get ``fuse = False`` (those kernels always ran the unfused three-pass
+epilogue), v1-v3 entries get ``pipeline = permute = False`` (those kernels
+always staged with a blocking single-buffer DMA over natural-order banks),
+v1-v4 entries get ``block_m = block_n = None`` (no pre-v5 kernel ran
+blocked), and v1-v5 entries get ``value_dtype = "float32"`` (every pre-v6
+kernel streamed f32 values) — and are re-persisted as v6 on the next save.
+A (corrupt or hand-edited) pre-v5 entry claiming ``method="bsr"``
+therefore migrates with no block shape; executors treat that as a stale
+plan and fall back to dense.  Likewise a migrated (f32) entry executed
+against an already-quantised bank falls back with the
+``value_dtype_mismatch`` reason code rather than silently dequantising.
 """
 from __future__ import annotations
 
@@ -41,9 +48,9 @@ from typing import Dict, Optional
 
 from repro.tuning.space import Candidate, ConvGeometry
 
-CACHE_VERSION = 5
+CACHE_VERSION = 6
 # Older schema versions load() can migrate in-memory (see module docstring).
-MIGRATABLE_VERSIONS = (1, 2, 3, 4)
+MIGRATABLE_VERSIONS = (1, 2, 3, 4, 5)
 
 
 class PlanCacheWarning(UserWarning):
@@ -68,6 +75,7 @@ class PlanEntry:
     permute: bool = False         # pallas: nnz-balanced bank
     block_m: Optional[int] = None  # bsr: BCSR tile shape
     block_n: Optional[int] = None
+    value_dtype: str = "float32"   # pallas/bsr: value-storage dtype
     est_s: float = 0.0
     source: str = "heuristic"     # measured | roofline | heuristic
     # Where this entry came from *this run* — freshly_tuned | cache_hit |
@@ -83,13 +91,15 @@ class PlanEntry:
         return Candidate(method=self.method, tm=self.tm, pad_to=self.pad_to,
                          te=self.te, tf=self.tf, fuse=self.fuse,
                          pipeline=self.pipeline, permute=self.permute,
-                         block_m=self.block_m, block_n=self.block_n)
+                         block_m=self.block_m, block_n=self.block_n,
+                         value_dtype=self.value_dtype)
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
                 "te": self.te, "tf": self.tf, "fuse": self.fuse,
                 "pipeline": self.pipeline, "permute": self.permute,
                 "block_m": self.block_m, "block_n": self.block_n,
+                "value_dtype": self.value_dtype,
                 "est_s": self.est_s, "source": self.source}
 
     @classmethod
@@ -99,13 +109,15 @@ class PlanEntry:
         # pipeline/permute the blocking single-buffer DMA over a
         # natural-order bank (v1-v3), absent block_m/block_n no BCSR tile
         # shape (v1-v4; executors fall back if such an entry claims
-        # method="bsr") — each the schedule those kernels ran.
+        # method="bsr"), absent value_dtype an f32 value stream (v1-v5) —
+        # each the schedule those kernels ran.
         return cls(method=d["method"], tm=d.get("tm"), pad_to=d.get("pad_to"),
                    te=d.get("te"), tf=d.get("tf"),
                    fuse=bool(d.get("fuse", False)),
                    pipeline=bool(d.get("pipeline", False)),
                    permute=bool(d.get("permute", False)),
                    block_m=d.get("block_m"), block_n=d.get("block_n"),
+                   value_dtype=d.get("value_dtype", "float32"),
                    est_s=float(d.get("est_s", 0.0)),
                    source=d.get("source", "heuristic"))
 
@@ -182,11 +194,12 @@ class PlanCache:
                 raise
             self._load_error(path, str(exc))
             return self
-        # v1-v4 migration happens in from_dict: absent te/tf default to None
+        # v1-v5 migration happens in from_dict: absent te/tf default to None
         # (the untiled schedule), absent fuse to False (the unfused
         # epilogue), absent pipeline/permute to False (blocking DMA,
-        # natural row order), and absent block_m/block_n to None (no BCSR
-        # shape).  save() re-persists as the current version.
+        # natural row order), absent block_m/block_n to None (no BCSR
+        # shape), and absent value_dtype to "float32" (f32 value stream).
+        # save() re-persists as the current version.
         provenance = "cache_hit" if version == CACHE_VERSION else "migrated"
         dropped = []
         for k, v in raw.items():

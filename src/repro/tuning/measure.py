@@ -25,12 +25,29 @@ import numpy as np
 from repro.core.direct_conv import dense_conv, direct_sparse_conv
 from repro.core.lowering import lowered_sparse_conv
 from repro.core.sparse_format import (balance_ell_conv, bcsr_conv_from_dense,
-                                      ell_from_dense, ell_from_dense_conv)
+                                      ell_from_dense, ell_from_dense_conv,
+                                      quantize_values)
 from repro.kernels.bsr_conv.ops import bsr_conv
 from repro.kernels.sparse_conv.ops import (apply_epilogue, halo_extent,
                                            sparse_conv)
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS, VPU_FLOPS
+from repro.launch.roofline import (HBM_BW, PEAK_FLOPS, VPU_FLOPS,
+                                   value_itemsize)
 from repro.tuning.space import Candidate, ConvGeometry
+
+
+def _value_stream_bytes(n_values: float, m_rows: int, itemsize: int,
+                        value_dtype: str) -> float:
+    """HBM bytes of one sparse value stream: the values at their storage
+    width plus, for a quantised dtype, the per-output-channel f32 scale
+    row.  ``itemsize`` is the bank's native width (the input dtype's) —
+    what a ``value_dtype="float32"`` candidate streams; quantised dtypes
+    are priced at ``roofline.value_itemsize`` instead.  This is the
+    roofline's byte credit for narrow value storage, and the reason every
+    int8 bench row reports strictly fewer HBM bytes than its f32 twin
+    (scale row < saved value bytes whenever a row has >= 2 values)."""
+    if value_dtype == "float32":
+        return float(n_values) * itemsize
+    return float(n_values) * value_itemsize(value_dtype) + 4.0 * m_rows
 
 
 class TimingStats(float):
@@ -156,7 +173,8 @@ def _pallas_terms(g: ConvGeometry, cand: Candidate):
     nnz = float(m * g.row_nnz_est)
     fl = 2.0 * n * nnz * e * f
     dout = float(n * m * e * f * 4)
-    ell_bytes = float(m * k_pad * (itemsize + 4))
+    ell_bytes = (_value_stream_bytes(m * k_pad, m, itemsize, cand.value_dtype)
+                 + float(m * k_pad * 4))  # + packed index
     other = (dout + ell_bytes + epilogue_bytes(g, fused=cand.fuse)
              + permute_bytes(g, cand.permute))
     return (fl / VPU_FLOPS, staged_input_bytes(g, cand) / HBM_BW,
@@ -217,7 +235,8 @@ def _bsr_terms(g: ConvGeometry, cand: Candidate,
     gather_elems = float(n * cells * gbm * kept * bn * te * tf)
     compute_s = mxu_fl / PEAK_FLOPS + gather_elems / VPU_FLOPS
     dout = float(n * gbm * bm * e * f * 4)
-    w_bytes = float(gbm * kept * bm * bn * itemsize)
+    w_bytes = _value_stream_bytes(gbm * kept * bm * bn, gbm * bm, itemsize,
+                                  cand.value_dtype)
     other = dout + w_bytes + epilogue_bytes(g, fused=cand.fuse)
     return (compute_s, staged_input_bytes(g, cand) / HBM_BW, other / HBM_BW)
 
@@ -380,13 +399,15 @@ def candidate_cost(g: ConvGeometry, cand: Candidate,
             kept = bcsr_true_kept(w_dense, bm, bn)
         flops = 2.0 * n * gbm * kept * bm * bn * e * f
         hbm = (staged_input_bytes(g, cand) + dout
-               + float(gbm * kept * bm * bn * itemsize)
+               + _value_stream_bytes(gbm * kept * bm * bn, gbm * bm,
+                                     itemsize, cand.value_dtype)
                + epilogue_bytes(g, fused=cand.fuse))
     elif cand.method == "pallas":
         flops = 2.0 * n * m * g.row_nnz_est * e * f
         k_pad = g.k_est(cand.pad_to or 8)
         hbm = (staged_input_bytes(g, cand) + dout
-               + float(m * k_pad * (itemsize + 4))
+               + _value_stream_bytes(m * k_pad, m, itemsize, cand.value_dtype)
+               + float(m * k_pad * 4)
                + epilogue_bytes(g, fused=cand.fuse)
                + permute_bytes(g, cand.permute))
     elif cand.method in ("lowered", "csr-direct"):
@@ -443,6 +464,8 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
         # reality is exactly what the wall clock should see.
         bcc = bcsr_conv_from_dense(
             w_dense, block=(cand.block_m or 8, cand.block_n or 128))
+        if cand.value_dtype != "float32":
+            bcc = quantize_values(bcc, cand.value_dtype)
         if cand.fuse:
             return jax.jit(lambda x, b=bcc: bsr_conv(
                 x, b, stride=g.stride, padding=g.pad, te=cand.te, tf=cand.tf,
@@ -463,7 +486,11 @@ def build_runner(g: ConvGeometry, cand: Candidate, w_dense: np.ndarray,
         # schedule and bias the fused-vs-unfused comparison.  A permute
         # candidate runs the nnz-balanced bank (the inverse-permutation
         # gather it pays for is inside sparse_conv, so it is timed); the
-        # pipeline flag picks the halo DMA schedule.
+        # pipeline flag picks the halo DMA schedule.  A quantised candidate
+        # runs the int8/fp8 bank the plan would pin (scale row prefetched,
+        # in-kernel dequantise — the cast cost is timed).
+        if cand.value_dtype != "float32":
+            ell = quantize_values(ell, cand.value_dtype)
         if cand.permute:
             ell = balance_ell_conv(ell)
         if cand.fuse:

@@ -26,12 +26,13 @@ import numpy as np
 
 from repro import telemetry
 from repro.core.sparse_format import (bcsr_conv_from_dense, ell_from_dense,
-                                      ell_from_dense_conv)
+                                      ell_from_dense_conv, quantize_values)
 from repro.engine import ConvOp, Program, lower
 from repro.tuning.cache import PlanCache, PlanEntry, layer_key
 from repro.tuning.measure import (bcsr_true_kept, measurable,
                                   measure_candidate, roofline_estimate)
-from repro.tuning.space import ConvGeometry, enumerate_candidates
+from repro.tuning.space import (ConvGeometry, allowed_value_dtypes,
+                                enumerate_candidates)
 
 _LOG = logging.getLogger("repro.tuning")
 
@@ -60,7 +61,7 @@ def geometry_of_op(op: ConvOp, *, batch: int = 1,
 def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
                w_dense: Optional[np.ndarray] = None, backend: str = "cpu",
                interpret: Optional[bool] = None, warmup: int = 1,
-               iters: int = 3) -> PlanEntry:
+               iters: int = 3, quantize: bool = False) -> PlanEntry:
     """Score every valid candidate for one layer and return the winner.
 
     ``interpret=None`` resolves per backend: compiled on TPU, interpret
@@ -71,10 +72,22 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
     the block-structured-pruning estimate (unstructured magnitude-pruned
     weights keep nearly every tile — the estimate would send such layers
     to a slower-than-dense MXU schedule).
+
+    ``quantize=True`` opts the candidate space into the narrow
+    value-storage dtypes (int8, and fp8 on TPU backends).  It is opt-in
+    because narrow storage is *lossy* — on memory-bound sparse layers the
+    roofline all but always prefers the smaller value stream, so a default
+    planner run would silently trade accuracy for bandwidth; a plan that
+    pins a narrow dtype is an explicit artifact instead.
     """
     if interpret is None:
         interpret = backend != "tpu"
-    cands = enumerate_candidates(g)
+    # The value-dtype axis is backend-capability-filtered up front: a plan
+    # must never pin a dtype the backend cannot execute (fp8 off-TPU) —
+    # the static verifier flags any such entry as a pre-flight error.
+    cands = enumerate_candidates(
+        g, value_dtypes=(allowed_value_dtypes(backend) if quantize
+                         else ("float32",)))
     if mode == "wall":
         cands = [cd for cd in cands if measurable(cd, backend)]
     if not cands:
@@ -119,6 +132,7 @@ def plan_layer(g: ConvGeometry, *, mode: str = "roofline",
                      te=best.te, tf=best.tf, fuse=best.fuse,
                      pipeline=best.pipeline, permute=best.permute,
                      block_m=best.block_m, block_n=best.block_n,
+                     value_dtype=best.value_dtype,
                      est_s=best_t,
                      source="measured" if mode == "wall" else "roofline")
 
@@ -148,6 +162,7 @@ def plan_program(program: Program, *, batch: int = 1,
                  backend: Optional[str] = None,
                  interpret: Optional[bool] = None,
                  warmup: int = 1, iters: int = 3,
+                 quantize: bool = False,
                  ) -> Dict[str, PlanEntry]:
     """Tune every conv op of a lowered program; returns name -> PlanEntry.
 
@@ -158,7 +173,9 @@ def plan_program(program: Program, *, batch: int = 1,
     but *uses* ``params`` when supplied (bsr candidates are priced from
     each layer's actual kept-block structure); ``mode="wall"`` requires
     them and measures on the pruned weights (as built by ``cnn.init_cnn``
-    / ``engine.init_conv_params``).
+    / ``engine.init_conv_params``).  ``quantize=True`` opts scoring into
+    the narrow value-storage dtypes (see :func:`plan_layer`) — quantised
+    winners are a deliberate accuracy/bandwidth trade, never a default.
     """
     if mode not in ("roofline", "wall"):
         raise ValueError(f"unknown tuning mode {mode!r}")
@@ -213,7 +230,8 @@ def plan_program(program: Program, *, batch: int = 1,
                         f"wall-mode tuning needs params for {op.name}")
                 entry = plan_layer(g, mode=mode, w_dense=w_dense,
                                    backend=backend, interpret=interpret,
-                                   warmup=warmup, iters=iters)
+                                   warmup=warmup, iters=iters,
+                                   quantize=quantize)
             misses += 1
             scored[key] = entry
             if telem:
@@ -243,7 +261,10 @@ def apply_plan_to_params(params: Dict[str, Any],
     so the engine never sorts inside a trace; a ``bsr`` entry gets its
     BCSR bank blocked at the plan's (block_m, block_n) — an entry with no
     block shape (a stale pre-v5 plan) is skipped, and the engine falls
-    back to dense for it.  Safe to call repeatedly.
+    back to dense for it.  A plan pinning a narrow ``value_dtype`` gets
+    its bank quantised here, host-side (per-output-channel symmetric
+    scales, values stored int8/fp8), so the engine's traced forward only
+    ever streams the narrow bank.  Safe to call repeatedly.
     """
     for name, pe in plan.items():
         entry = params.get(name)
@@ -255,13 +276,18 @@ def apply_plan_to_params(params: Dict[str, Any],
             entry["ell2d_auto"] = ell_from_dense(
                 w.reshape(w.shape[0], -1), pad_to=pad_to)
         elif pe.method in ("csr-direct", "pallas"):
-            entry["ell_auto"] = ell_from_dense_conv(
+            bank = ell_from_dense_conv(
                 w, pad_to=pad_to,
                 balance=pe.method == "pallas" and pe.permute)
+            if pe.method == "pallas" and pe.value_dtype != "float32":
+                bank = quantize_values(bank, pe.value_dtype)
+            entry["ell_auto"] = bank
         elif (pe.method == "bsr" and pe.block_m is not None
               and pe.block_n is not None):
-            entry["bcsr_auto"] = bcsr_conv_from_dense(
-                w, block=(pe.block_m, pe.block_n))
+            bank = bcsr_conv_from_dense(w, block=(pe.block_m, pe.block_n))
+            if pe.value_dtype != "float32":
+                bank = quantize_values(bank, pe.value_dtype)
+            entry["bcsr_auto"] = bank
     return params
 
 
@@ -269,15 +295,18 @@ def format_plan(plan: Dict[str, PlanEntry]) -> str:
     """Human-readable per-layer plan table (the paper's customization table)."""
     lines = [f"{'layer':<22} {'method':<11} {'tm':>4} {'te':>4} {'tf':>4} "
              f"{'pad_to':>6} {'block':>8} {'fuse':>5} {'pipe':>5} {'perm':>5} "
-             f"{'est_us':>10} source"]
+             f"{'vdtype':>8} {'est_us':>10} source"]
     for name, pe in plan.items():
         block = (f"{pe.block_m}x{pe.block_n}"
                  if pe.block_m and pe.block_n else "-")
+        vdt = {"float32": "f32", "float8_e4m3fn": "fp8"}.get(
+            pe.value_dtype, pe.value_dtype)
         lines.append(
             f"{name:<22} {pe.method:<11} {pe.tm or '-':>4} "
             f"{pe.te or '-':>4} {pe.tf or '-':>4} "
             f"{pe.pad_to or '-':>6} {block:>8} {'y' if pe.fuse else '-':>5} "
             f"{'y' if pe.pipeline else '-':>5} "
             f"{'y' if pe.permute else '-':>5} "
+            f"{vdt:>8} "
             f"{pe.est_s * 1e6:>10.1f} {pe.source}")
     return "\n".join(lines)

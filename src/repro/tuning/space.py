@@ -48,10 +48,28 @@ import math
 from typing import List, Optional, Tuple
 
 from repro.kernels.bsr_conv.ops import BLOCK_CANDIDATES, bsr_tile_candidates
-from repro.kernels.budget import bsr_smem_fits, smem_fits
+from repro.kernels.budget import bsr_smem_fits, smem_fits, value_itemsize
 from repro.kernels.sparse_conv.ops import tile_candidates
 
 METHODS = ("dense", "lowered", "csr-direct", "pallas", "bsr")
+
+# Value-storage dtypes the kernel candidates enumerate: f32 banks plus the
+# quantised (per-output-channel symmetric scale, f32 accumulate) narrow
+# formats.  Only the Pallas paths (pallas / bsr) execute narrow banks —
+# dense / lowered / csr-direct candidates stay float32.  Callers (the
+# planner) filter this by backend capability: fp8 requires a TPU backend.
+VALUE_DTYPES = ("float32", "int8", "float8_e4m3fn")
+
+
+def allowed_value_dtypes(backend: str) -> Tuple[str, ...]:
+    """The value-storage dtypes executable on ``backend`` — the single
+    capability policy the planner (candidate filtering) and the static
+    verifier (pre-flight plan audits) share.  fp8 (``float8_e4m3fn``)
+    needs TPU hardware casts; int8 and f32 run everywhere the Pallas
+    paths do (including interpret mode)."""
+    if backend == "tpu":
+        return VALUE_DTYPES
+    return tuple(d for d in VALUE_DTYPES if d != "float8_e4m3fn")
 
 # ELL K-padding buckets (the paper's kernel-customization table keys on K
 # granularity).  8 is the repo-wide default; 4 trims padded work on very
@@ -143,7 +161,10 @@ class Candidate:
     pallas — True double-buffers the halo DMA; ``permute`` only for pallas
     — True runs an nnz-balanced bank with the inverse permutation applied
     to the output; ``block_m``/``block_n`` only for bsr — the BCSR tile
-    shape (te/tf are meaningful for bsr too).
+    shape (te/tf are meaningful for bsr too); ``value_dtype`` only for
+    pallas and bsr — the bank's value-storage dtype ("float32", or the
+    quantised "int8"/"float8_e4m3fn" with per-output-channel f32 scales
+    and f32 accumulation).
     """
 
     method: str
@@ -156,12 +177,14 @@ class Candidate:
     permute: bool = False
     block_m: Optional[int] = None
     block_n: Optional[int] = None
+    value_dtype: str = "float32"
 
     def to_dict(self) -> dict:
         return {"method": self.method, "tm": self.tm, "pad_to": self.pad_to,
                 "te": self.te, "tf": self.tf, "fuse": self.fuse,
                 "pipeline": self.pipeline, "permute": self.permute,
-                "block_m": self.block_m, "block_n": self.block_n}
+                "block_m": self.block_m, "block_n": self.block_n,
+                "value_dtype": self.value_dtype}
 
     @classmethod
     def from_dict(cls, d: dict) -> "Candidate":
@@ -170,16 +193,21 @@ class Candidate:
                    fuse=bool(d.get("fuse", False)),
                    pipeline=bool(d.get("pipeline", False)),
                    permute=bool(d.get("permute", False)),
-                   block_m=d.get("block_m"), block_n=d.get("block_n"))
+                   block_m=d.get("block_m"), block_n=d.get("block_n"),
+                   value_dtype=d.get("value_dtype", "float32"))
 
 
-def pallas_feasible(g: ConvGeometry, k: int) -> bool:
-    """The Pallas kernel needs SMEM-resident packed indices (+ bias row) and
-    at least one VMEM-feasible (tm, te, tf) tiling.  Stride is handled
+def pallas_feasible(g: ConvGeometry, k: int,
+                    value_dtype: str = "float32") -> bool:
+    """The Pallas kernel needs SMEM-resident packed indices (+ bias row, +
+    the scale row for a quantised bank) and at least one VMEM-feasible
+    (tm, te, tf) tiling at the bank's value width.  Stride is handled
     in-kernel."""
-    if not smem_fits(g.m, k):
+    vsize = value_itemsize(value_dtype)
+    if not smem_fits(g.m, k, vsize == 1):
         return False
-    return bool(tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride))
+    return bool(tile_candidates(g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
+                                value_itemsize=vsize))
 
 
 def bsr_feasible(g: ConvGeometry, bm: int, bn: int) -> bool:
@@ -201,7 +229,9 @@ def bsr_feasible(g: ConvGeometry, bm: int, bn: int) -> bool:
 
 
 def enumerate_candidates(g: ConvGeometry,
-                         methods: Tuple[str, ...] = METHODS) -> List[Candidate]:
+                         methods: Tuple[str, ...] = METHODS,
+                         value_dtypes: Tuple[str, ...] = ("float32",),
+                         ) -> List[Candidate]:
     """All statically-valid customization points for one layer.
 
     Every emitted pallas ``(tm, te, tf)`` fits the VMEM budget (via
@@ -215,6 +245,16 @@ def enumerate_candidates(g: ConvGeometry,
     so their feasible sets can be smaller — and each tiling additionally in
     an nnz-balanced (``permute``) variant.  BSR points enumerate the block
     shape ladder x feasible spatial tilings x the fuse axis.
+
+    ``value_dtypes`` is the value-storage axis: both Pallas paths enumerate
+    each requested dtype with its own feasibility probe (a quantised bank's
+    smaller value block can make tilings feasible that f32 busts, and its
+    scale row tightens the SMEM gate).  The default is float32 only —
+    narrow storage is lossy, so quantised candidates enter the space only
+    when a caller opts in (``plan_layer(..., quantize=True)`` passes the
+    backend-filtered ``allowed_value_dtypes``; fp8 is dropped off-TPU to
+    keep unexecutable points out of the measured space).  Dense / lowered /
+    csr-direct candidates stay float32 always.
     """
     if g.sparsity <= 0.0:
         # Dense-kept layers (paper: conv1 et al.) have no sparse format.
@@ -224,28 +264,39 @@ def enumerate_candidates(g: ConvGeometry,
         out.append(Candidate("dense"))
     if "bsr" in methods:
         itemsize = 2 if g.dtype in ("bfloat16", "float16") else 4
-        for bm, bn in BLOCK_CANDIDATES:
-            # SMEM gate at gbn, the worst-case KB any real bank pads to —
-            # the runtime check sees the actual (max-row) KB, and a
-            # mean-estimate gate could emit plans that silently fall back.
-            gbm, gbn, _ = g.bsr_grid(bm, bn)
-            if not bsr_smem_fits(gbm, gbn):
-                continue
-            for fuse in (False, True):
-                tilings = bsr_tile_candidates(
-                    g.c, g.e, g.f, g.r, g.s, g.stride, bm, bn,
-                    itemsize=itemsize,
-                    fuse_res=fuse and g.residual)[:MAX_TILINGS]
-                for te, tf in tilings:
-                    out.append(Candidate("bsr", te=te, tf=tf, fuse=fuse,
-                                         block_m=bm, block_n=bn))
+        for vdt in value_dtypes:
+            vsize = value_itemsize(vdt)
+            quantized = vsize == 1
+            for bm, bn in BLOCK_CANDIDATES:
+                # SMEM gate at gbn, the worst-case KB any real bank pads to —
+                # the runtime check sees the actual (max-row) KB, and a
+                # mean-estimate gate could emit plans that silently fall back.
+                gbm, gbn, _ = g.bsr_grid(bm, bn)
+                if not bsr_smem_fits(gbm, gbn):
+                    continue
+                for fuse in (False, True):
+                    tilings = bsr_tile_candidates(
+                        g.c, g.e, g.f, g.r, g.s, g.stride, bm, bn,
+                        itemsize=itemsize,
+                        fuse_res=fuse and g.residual,
+                        value_itemsize=vsize,
+                        quantized=quantized)[:MAX_TILINGS]
+                    for te, tf in tilings:
+                        out.append(Candidate("bsr", te=te, tf=tf, fuse=fuse,
+                                             block_m=bm, block_n=bn,
+                                             value_dtype=vdt))
     for pad_to in PAD_TO_BUCKETS:
         k = g.k_est(pad_to)
         if "lowered" in methods:
             out.append(Candidate("lowered", pad_to=pad_to))
         if "csr-direct" in methods:
             out.append(Candidate("csr-direct", pad_to=pad_to))
-        if "pallas" in methods and smem_fits(g.m, k):
+        if "pallas" not in methods:
+            continue
+        for vdt in value_dtypes:
+            vsize = value_itemsize(vdt)
+            if not smem_fits(g.m, k, vsize == 1):
+                continue
             for fuse in (False, True):
                 # Pipelined first: the scorer keeps the earliest candidate
                 # on ties, and on memory-bound layers the two schedules'
@@ -255,10 +306,11 @@ def enumerate_candidates(g: ConvGeometry,
                     tilings = tile_candidates(
                         g.m, g.c, g.e, g.f, k, g.r, g.s, g.stride,
                         fuse_res=fuse and g.residual,
-                        pipeline=pipe)[:MAX_TILINGS]
+                        pipeline=pipe, value_itemsize=vsize)[:MAX_TILINGS]
                     for tm, te, tf in tilings:
                         for permute in (False, True):
                             out.append(Candidate(
                                 "pallas", tm=tm, pad_to=pad_to, te=te, tf=tf,
-                                fuse=fuse, pipeline=pipe, permute=permute))
+                                fuse=fuse, pipeline=pipe, permute=permute,
+                                value_dtype=vdt))
     return out

@@ -66,6 +66,8 @@ def test_rule_catalogue_ids_are_dotted_and_unique():
     ("vmem_busting_tiling.json", "sched.vmem_tiling", "error"),
     ("vmem_busting_pipeline.json", "sched.pipeline_demoted", "warning"),
     ("bad_key.json", "plan.key_unparsable", "error"),
+    ("fp8_on_cpu.json", "sched.value_dtype", "error"),
+    ("bad_value_dtype.json", "sched.value_dtype", "error"),
 ])
 def test_known_bad_fixture(fixture, rule, severity):
     diags = plan_rules.check_plan_file(os.path.join(FIXTURES, fixture))

@@ -322,3 +322,94 @@ def test_engine_fused_methods_match_dense(method):
     unfused = np.asarray(cnn.engine_for(net, params, (3, 12, 12))(
         x, "pallas", fuse=False))
     np.testing.assert_allclose(unfused, ref, rtol=1e-5, atol=1e-5)
+
+# ---------------------------------------------------------------------------
+# quantised value streams: pinned plans execute narrow banks, stale plans
+# fall back loudly
+# ---------------------------------------------------------------------------
+
+def _quant_micro():
+    import dataclasses
+
+    from repro.tuning import PlanCache, plan_program
+
+    net = [cnn.Conv("c0", 8, 3, 1, 1, sparsity=0.0), cnn.Relu(),
+           cnn.Conv("c1", 8, 3, 1, 1, sparsity=0.75), cnn.Relu(),
+           cnn.Pool("gap"), cnn.FC("fc", 10)]
+    rng = np.random.default_rng(0)
+    program = lower(net, (3, 8, 8))
+    params = cnn.init_cnn(net, 3, rng, 8)
+    x = rng.standard_normal((1, 3, 8, 8)).astype(np.float32)
+    plan = plan_program(program, batch=1, mode="roofline", cache=PlanCache())
+    qplan = {name: (dataclasses.replace(pe, value_dtype="int8")
+                    if pe.method in ("pallas", "bsr") else pe)
+             for name, pe in plan.items()}
+    assert any(pe.value_dtype == "int8" for pe in qplan.values())
+    return program, params, x, plan, qplan
+
+
+def test_engine_int8_pinned_plan_executes_quantised():
+    """An int8-pinned plan over host-quantised banks executes its planned
+    kernels — zero fallbacks, the report rows carry the executed narrow
+    dtype — and the output agrees with the f32 forward to quantisation
+    tolerance."""
+    from repro import telemetry
+    from repro.engine import CnnEngine
+    from repro.tuning import apply_plan_to_params
+
+    program, params, x, plan, qplan = _quant_micro()
+    qparams = apply_plan_to_params(params, qplan)
+    engine = CnnEngine(program, qparams, qplan, strict=True)
+    telemetry.reset()
+    try:
+        with telemetry.enabled():
+            y_q = np.asarray(engine(x, "auto"))
+            report = engine.last_report
+    finally:
+        telemetry.reset()
+    assert report is not None and report.fallback_count == 0
+    assert any(o.value_dtype == "int8" for o in report.ops)
+    y_f = np.asarray(CnnEngine(program, params, None)(x, "dense"))
+    rel = np.abs(y_q - y_f).max() / (np.abs(y_f).max() or 1.0)
+    assert rel < 0.05, rel
+
+
+def test_engine_int8_plan_quantises_f32_bank_in_trace():
+    """A narrow plan bound over plain f32 banks quantises in-trace — same
+    per-channel scales, baked into the jit — so the output is bit-identical
+    to the host-side apply_plan_to_params route."""
+    from repro.engine import CnnEngine
+    from repro.tuning import apply_plan_to_params
+
+    program, params, x, plan, qplan = _quant_micro()
+    y_trace = np.asarray(CnnEngine(program, params, qplan)(x, "auto"))
+    qparams = apply_plan_to_params(params, qplan)
+    y_host = np.asarray(CnnEngine(program, qparams, qplan)(x, "auto"))
+    np.testing.assert_array_equal(y_trace, y_host)
+
+
+def test_engine_value_dtype_mismatch_falls_back_dense():
+    """A migrated f32 plan executed against an already-quantised bank must
+    NOT silently dequantise: the op falls back to dense with the
+    ``value_dtype_mismatch`` reason (and so stays numerically exact)."""
+    from repro import telemetry
+    from repro.engine import CnnEngine
+    from repro.tuning import apply_plan_to_params
+
+    program, params, x, plan, qplan = _quant_micro()
+    qparams = apply_plan_to_params(params, qplan)   # int8 banks...
+    engine = CnnEngine(program, qparams, plan)      # ...but the f32 plan
+    telemetry.reset()
+    try:
+        with telemetry.enabled():
+            y = np.asarray(engine(x, "auto"))
+            report = engine.last_report
+    finally:
+        telemetry.reset()
+    assert report is not None and report.fallback_count > 0
+    reasons = {o.fallback_reason for o in report.fallback_ops}
+    assert reasons == {"value_dtype_mismatch"}
+    # every mismatched op executed the exact dense path
+    assert all(o.value_dtype == "float32" for o in report.ops)
+    y_dense = np.asarray(CnnEngine(program, params, None)(x, "dense"))
+    np.testing.assert_allclose(y, y_dense, rtol=1e-5, atol=1e-6)

@@ -540,3 +540,63 @@ def test_degenerate_pad_to_clamped():
 def test_empty_bank_rejected():
     with pytest.raises(ValueError):
         ell_from_dense_conv(np.zeros((0, 2, 3, 3), np.float32))
+
+# ---------------------------------------------------------------------------
+# quantised value streams: int8 / fp8 banks, in-kernel dequantisation
+# ---------------------------------------------------------------------------
+
+from repro.core.sparse_format import (QUANT_DTYPES, dequantize,  # noqa: E402
+                                      quantize_values)
+
+
+@pytest.mark.parametrize("value_dtype", sorted(QUANT_DTYPES))
+@pytest.mark.parametrize("pipeline", [False, True])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_quantised_bank_bit_identical_to_dequantised(value_dtype, pipeline,
+                                                     stride):
+    """The kernel's in-register dequantisation (scale at the FMA, f32
+    accumulator) performs the exact multiply dequantize() does host-side,
+    so a quantised bank through either schedule is bit-identical to the
+    f32 kernel run on the dequantised bank — and within quantisation
+    tolerance of the dense oracle.  Edge tiles (te/tf not dividing E/F)
+    and the fused epilogue ride along."""
+    n, c, h, w, m, r, pad = 2, 4, 13, 11, 8, 3, 1
+    rng = np.random.default_rng(31000 + 100 * stride + 10 * pipeline
+                                + len(value_dtype))
+    x = jnp.asarray(rng.standard_normal((n, c, h, w)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((m, c, r, r)).astype(np.float32)), 0.7))
+    q = quantize_values(ell_from_dense_conv(wt), value_dtype)
+    assert q.value_dtype == value_dtype
+    bias = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    e, f = out_spatial(h, w, r, r, stride, pad)
+    res = jnp.asarray(rng.standard_normal((n, m, e, f)).astype(np.float32))
+    te, tf = max(1, (e + 1) // 2), max(1, f // 2 + 1)   # non-dividing tiles
+    kw = dict(stride=stride, padding=pad, tm=4, te=te, tf=tf, bias=bias,
+              fuse_relu=True, residual=res, pipeline=pipeline, interpret=True)
+    y_q = sparse_conv(x, q, **kw)
+    y_f32 = sparse_conv(x, dequantize(q), **kw)
+    np.testing.assert_array_equal(np.asarray(y_q), np.asarray(y_f32))
+    ref = sparse_conv_ref(x, jnp.asarray(wt), stride=stride, padding=pad)
+    ref = np.asarray(jax.nn.relu(ref + bias[None, :, None, None] + res))
+    rel = (np.linalg.norm(np.asarray(y_q) - ref) / np.linalg.norm(ref))
+    assert rel < 0.05, rel
+
+
+def test_quantised_balanced_bank_parity():
+    """Quantisation composes with row balancing: scales follow the
+    permuted rows, and the permuted quantised bank stays bit-identical to
+    the f32 kernel on its dequantised twin."""
+    rng = np.random.default_rng(31999)
+    x = jnp.asarray(rng.standard_normal((1, 4, 10, 10)).astype(np.float32))
+    wt = np.asarray(magnitude_prune(
+        jnp.asarray(rng.standard_normal((8, 4, 3, 3)).astype(np.float32)), 0.8))
+    bal = balance_ell_conv(ell_from_dense_conv(wt))
+    q = quantize_values(bal, "int8")
+    assert q.perm is not None
+    y_q = sparse_conv(x, q, padding=1, interpret=True)
+    y_f32 = sparse_conv(x, dequantize(q), padding=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_q), np.asarray(y_f32))
+    ref = np.asarray(sparse_conv_ref(x, jnp.asarray(wt), padding=1))
+    rel = np.linalg.norm(np.asarray(y_q) - ref) / np.linalg.norm(ref)
+    assert rel < 0.05, rel

@@ -257,3 +257,129 @@ def test_block_prune_keeps_dense_tiles():
         for j in range(4):
             t = tiles[i, j]
             assert (t == 0).all() or (t != 0).all()
+
+# ---------------------------------------------------------------------------
+# Quantised value streams: int8 / fp8 banks with per-channel f32 scales
+# ---------------------------------------------------------------------------
+
+from repro.core.sparse_format import (QUANT_DTYPES, dequantize,  # noqa: E402
+                                      quantize_values)
+
+
+def _quant_err(w, value_dtype):
+    """(abs error, per-channel scale broadcast to w) after a round-trip."""
+    ell = ell_from_dense_conv(w)
+    q = quantize_values(ell, value_dtype)
+    assert q.value_dtype == value_dtype
+    deq = dequantize(q)
+    err = np.abs(_ell_conv_to_dense(deq) - w)
+    scale = np.asarray(q.scale)
+    return err, scale
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.floats(0.0, 0.95), st.integers(0, 1000))
+def test_quantize_int8_roundtrip_within_bound(m, sparsity, seed):
+    """int8 round-trip error is elementwise <= s/2 per output channel — the
+    documented round-to-nearest bound on w/s in [-127, 127]."""
+    rng = np.random.default_rng(seed)
+    w = _pruned(rng, (m, 3, 3, 3), sparsity)
+    err, scale = _quant_err(w, "int8")
+    bound = scale[:, None, None, None] * 0.5 * (1 + 1e-6) + 1e-12
+    assert (err <= bound).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.floats(0.0, 0.95), st.integers(0, 1000))
+def test_quantize_fp8_roundtrip_within_bound(m, sparsity, seed):
+    """fp8 e4m3 round-trip error is <= max(|w| * 2**-4, s * 2**-10): 3
+    mantissa bits give 2**-4 relative error on normals, and subnormal
+    quotients bottom out at an absolute s * 2**-10."""
+    rng = np.random.default_rng(seed)
+    w = _pruned(rng, (m, 3, 3, 3), sparsity)
+    err, scale = _quant_err(w, "float8_e4m3fn")
+    s = scale[:, None, None, None]
+    bound = np.maximum(np.abs(w) * 2.0**-4, s * 2.0**-10) * (1 + 1e-5) + 1e-12
+    assert (err <= bound).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 20), st.sampled_from(sorted(QUANT_DTYPES)),
+       st.integers(0, 1000))
+def test_quantize_per_channel_scales(m, value_dtype, seed):
+    """Channel m's scale is exactly absmax_m / qmax (f32), computed over
+    that channel's nonzeros alone — scaling one channel scales only its own
+    scale entry."""
+    rng = np.random.default_rng(seed)
+    w = _pruned(rng, (m, 4, 3, 3), 0.6)
+    q = quantize_values(ell_from_dense_conv(w), value_dtype)
+    absmax = np.abs(w).max(axis=(1, 2, 3)).astype(np.float32)
+    qmax = np.float32(QUANT_DTYPES[value_dtype])
+    expect = np.where(absmax > 0, absmax / qmax, np.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(q.scale), expect)
+
+
+@pytest.mark.parametrize("value_dtype", sorted(QUANT_DTYPES))
+def test_quantize_all_zero_bank_exact(value_dtype):
+    """All-zero channels take scale 1 and round-trip to exact zeros — no
+    division by zero, no denormal dust."""
+    w = np.zeros((6, 3, 3, 3), np.float32)
+    q = quantize_values(ell_from_dense_conv(w), value_dtype)
+    np.testing.assert_array_equal(np.asarray(q.scale), 1.0)
+    assert (np.asarray(dequantize(q).value) == 0.0).all()
+    bq = quantize_values(bcsr_conv_from_dense(w, block=(4, 8)), value_dtype)
+    np.testing.assert_array_equal(np.asarray(bq.scale), 1.0)
+    assert (np.asarray(dequantize(bq).blocks) == 0.0).all()
+
+
+def test_quantize_already_quantised_raises():
+    w = np.random.default_rng(7).standard_normal((4, 2, 3, 3)).astype(
+        np.float32)
+    q = quantize_values(ell_from_dense_conv(w), "int8")
+    with pytest.raises(ValueError, match="already quantised"):
+        quantize_values(q, "int8")
+    bq = quantize_values(bcsr_conv_from_dense(w, block=(4, 8)), "int8")
+    with pytest.raises(ValueError, match="already quantised"):
+        quantize_values(bq, "float8_e4m3fn")
+
+
+def test_quantize_unknown_dtype_raises():
+    w = np.zeros((2, 1, 1, 1), np.float32)
+    with pytest.raises(ValueError, match="unsupported quantised value"):
+        quantize_values(ell_from_dense_conv(w), "int4")
+
+
+def test_dequantize_passthrough_on_f32_banks():
+    rng = np.random.default_rng(9)
+    w = _pruned(rng, (8, 3, 3, 3), 0.5)
+    ell = ell_from_dense_conv(w)
+    assert dequantize(ell) is ell and ell.value_dtype == "float32"
+    bc = bcsr_conv_from_dense(w, block=(4, 8))
+    assert dequantize(bc) is bc and bc.value_dtype == "float32"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 16), st.integers(1, 4),
+       st.sampled_from(sorted(QUANT_DTYPES)), st.integers(0, 1000))
+def test_quantize_bcsr_roundtrip_within_bound(m, c, value_dtype, seed):
+    """BcsrConv quantisation respects the same per-channel bounds, with the
+    scale of flattened row i living at scale[i // bm, i % bm]; padding tiles
+    stay exactly zero."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, c, 3, 3)).astype(np.float32)
+    w = np.asarray(block_prune_conv(jnp.asarray(w), 0.5, (4, 8)))
+    bc = bcsr_conv_from_dense(w, block=(4, 8))
+    q = quantize_values(bc, value_dtype)
+    assert q.value_dtype == value_dtype
+    err = np.abs(np.asarray(bcsr_conv_to_dense(dequantize(q))) - w)
+    s = np.asarray(q.scale).reshape(-1)[:m][:, None, None, None]
+    if value_dtype == "int8":
+        bound = s * 0.5 * (1 + 1e-6) + 1e-12
+    else:
+        bound = np.maximum(np.abs(w) * 2.0**-4, s * 2.0**-10) \
+            * (1 + 1e-5) + 1e-12
+    assert (err <= bound).all()
+    # padding tiles past each block-row's nblocks stay inert zeros
+    blocks, counts = np.asarray(q.blocks), np.asarray(q.nblocks)
+    for i in range(blocks.shape[0]):
+        assert (blocks[i, counts[i]:].astype(np.float32) == 0).all()

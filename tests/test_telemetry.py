@@ -180,7 +180,7 @@ def test_time_fn_returns_spread():
 # ------------------------------------- plan-cache provenance counters
 
 def test_plan_cache_migration_counters(tmp_path):
-    """Loading every migratable schema (v1-v4) under telemetry counts each
+    """Loading every migratable schema (v1-v5) under telemetry counts each
     entry as a migration and marks its provenance; a current-version reload
     counts as cache hits instead."""
     from repro.tuning.cache import MIGRATABLE_VERSIONS
@@ -192,6 +192,8 @@ def test_plan_cache_migration_counters(tmp_path):
             "fuse": True},
         4: {"method": "pallas", "tm": 16, "te": 16, "tf": 16, "pad_to": 8,
             "fuse": True, "pipeline": True, "permute": True},
+        5: {"method": "bsr", "te": 16, "tf": 16, "fuse": True,
+            "block_m": 8, "block_n": 128},
     }
     assert set(fixtures) == set(MIGRATABLE_VERSIONS)
     with telemetry.enabled():
@@ -206,7 +208,7 @@ def test_plan_cache_migration_counters(tmp_path):
         assert snap["tuning.cache.load_migrations"]["value"] == len(fixtures)
         # re-persist one and reload: current version -> cache_hit, and the
         # migration counter does not move
-        out = tmp_path / "v5.json"
+        out = tmp_path / "v6.json"
         cache.save(str(out))
         assert PlanCache(str(out)).get("k").provenance == "cache_hit"
         snap = telemetry.snapshot()

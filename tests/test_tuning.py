@@ -597,12 +597,13 @@ def test_plan_cache_v1_migration(tmp_path):
     assert pe.candidate.fuse is False
     assert pe.candidate.pipeline is False and pe.candidate.permute is False
     assert pe.candidate.block_m is None and pe.candidate.block_n is None
-    out = tmp_path / "v5.json"
+    out = tmp_path / "v6.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 5
+    assert doc["version"] == CACHE_VERSION == 6
     assert doc["entries"]["k1"]["te"] is None
     assert doc["entries"]["k1"]["fuse"] is False
+    assert doc["entries"]["k1"]["value_dtype"] == "float32"
     assert doc["entries"]["k1"]["pipeline"] is False
     assert doc["entries"]["k1"]["permute"] is False
     assert doc["entries"]["k1"]["block_m"] is None
@@ -614,7 +615,7 @@ def test_plan_cache_v2_migration_roundtrip(tmp_path):
     """v2 documents (te/tf but no fuse/pipeline/permute) load via migration
     — entries get fuse=False (the unfused three-pass epilogue) and
     pipeline=permute=False (the v2 kernel's blocking single-buffer DMA) —
-    and the re-saved v5 file round-trips identically."""
+    and the re-saved v6 file round-trips identically."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -636,9 +637,10 @@ def test_plan_cache_v2_migration_roundtrip(tmp_path):
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 5
+    assert doc["version"] == CACHE_VERSION == 6
     assert doc["entries"]["kp"]["fuse"] is False
     assert doc["entries"]["kp"]["pipeline"] is False
+    assert doc["entries"]["kp"]["value_dtype"] == "float32"
     reloaded = PlanCache(str(out))
     assert reloaded.entries == cache.entries
 
@@ -647,7 +649,7 @@ def test_plan_cache_v3_migration_roundtrip(tmp_path):
     """v3 documents (fuse but no pipeline/permute) load via migration —
     entries keep their fuse flag and get pipeline=permute=False, the
     blocking natural-order schedule every v3 kernel ran — and the re-saved
-    v5 file round-trips identically."""
+    v6 file round-trips identically."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION
@@ -671,7 +673,7 @@ def test_plan_cache_v3_migration_roundtrip(tmp_path):
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 5
+    assert doc["version"] == CACHE_VERSION == 6
     assert doc["entries"]["kf"]["fuse"] is True
     assert doc["entries"]["kf"]["pipeline"] is False
     assert doc["entries"]["kf"]["permute"] is False
@@ -681,7 +683,7 @@ def test_plan_cache_v3_migration_roundtrip(tmp_path):
 def test_plan_cache_v4_migration_roundtrip(tmp_path):
     """v4 documents (pipeline/permute but no block shape) load via
     migration — entries keep their schedule flags and get block_m =
-    block_n = None (no pre-v5 kernel ran blocked) — and the re-saved v5
+    block_n = None (no pre-v5 kernel ran blocked) — and the re-saved v6
     file round-trips identically."""
     import json
 
@@ -704,16 +706,18 @@ def test_plan_cache_v4_migration_roundtrip(tmp_path):
     out = tmp_path / "migrated.json"
     cache.save(str(out))
     doc = json.loads(out.read_text())
-    assert doc["version"] == CACHE_VERSION == 5
+    assert doc["version"] == CACHE_VERSION == 6
     assert doc["entries"]["kp"]["pipeline"] is True
     assert doc["entries"]["kp"]["block_m"] is None
+    assert doc["entries"]["kp"]["value_dtype"] == "float32"
     assert PlanCache(str(out)).entries == cache.entries
 
 
-def test_plan_cache_migration_chain_v1_to_v5(tmp_path):
-    """The full migration chain: one fixture per historical schema (v1-v4)
+def test_plan_cache_migration_chain_v1_to_v6(tmp_path):
+    """The full migration chain: one fixture per historical schema (v1-v5)
     loads, defaults exactly the fields its kernels predate, re-persists as
-    v5, and the v5 file round-trips bit-for-bit."""
+    v6, and the v6 file round-trips bit-for-bit. Every pre-v6 entry streams
+    f32 values, so migration pins value_dtype="float32"."""
     import json
 
     from repro.tuning.cache import CACHE_VERSION, MIGRATABLE_VERSIONS
@@ -731,6 +735,10 @@ def test_plan_cache_migration_chain_v1_to_v5(tmp_path):
              "fuse": True, "pipeline": True, "permute": True},
             PlanEntry(method="pallas", tm=8, te=16, tf=16, pad_to=8,
                       fuse=True, pipeline=True, permute=True)),
+        5: ({"method": "bsr", "te": 16, "tf": 16, "fuse": True,
+             "block_m": 8, "block_n": 128},
+            PlanEntry(method="bsr", te=16, tf=16, fuse=True,
+                      block_m=8, block_n=128)),
     }
     assert set(fixtures) == set(MIGRATABLE_VERSIONS)
     for ver, (raw, expect) in fixtures.items():
@@ -738,11 +746,14 @@ def test_plan_cache_migration_chain_v1_to_v5(tmp_path):
         p.write_text(json.dumps({"version": ver, "entries": {"k": raw}}))
         cache = PlanCache(str(p))
         assert cache.get("k") == expect
-        assert cache.get("k").block_m is None
+        assert cache.get("k").value_dtype == "float32"
+        if ver < 5:
+            assert cache.get("k").block_m is None
         out = tmp_path / f"v{ver}-migrated.json"
         cache.save(str(out))
         doc = json.loads(out.read_text())
-        assert doc["version"] == CACHE_VERSION == 5
+        assert doc["version"] == CACHE_VERSION == 6
+        assert doc["entries"]["k"]["value_dtype"] == "float32"
         assert PlanCache(str(out)).entries == cache.entries
 
 
@@ -870,3 +881,87 @@ def test_apply_plan_rebuilds_formats():
     plan2 = {"c1": PlanEntry(method="lowered", pad_to=16)}
     apply_plan_to_params(params, plan2)
     assert params["c1"]["ell2d_auto"].k % 16 == 0
+
+
+# ---------------------------------------------------------------------------
+# quantised value-dtype axis (v6): opt-in enumeration, roofline credit,
+# backend capability filtering, cache round-trip
+# ---------------------------------------------------------------------------
+
+def test_candidate_space_default_is_f32_only():
+    """Narrow value storage is lossy, so the default space must stay
+    float32 — quantised candidates appear only on explicit opt-in, and
+    then for the Pallas paths alone (dense/lowered/csr-direct have no
+    narrow bank to stream)."""
+    from repro.tuning.space import VALUE_DTYPES
+
+    g = _geom()
+    assert {c.value_dtype for c in enumerate_candidates(g)} == {"float32"}
+    cands = enumerate_candidates(g, value_dtypes=VALUE_DTYPES)
+    for method in ("pallas", "bsr"):
+        assert ({c.value_dtype for c in cands if c.method == method}
+                == set(VALUE_DTYPES))
+    assert all(c.value_dtype == "float32" for c in cands
+               if c.method not in ("pallas", "bsr"))
+    _assert_pallas_fits(g, cands)
+
+
+def test_allowed_value_dtypes_backend_policy():
+    """fp8 needs TPU hardware casts; int8 and f32 run everywhere.  This is
+    the single capability table the planner and the static verifier share,
+    so they can never disagree about a plan's executability."""
+    from repro.tuning.space import VALUE_DTYPES, allowed_value_dtypes
+
+    assert allowed_value_dtypes("tpu") == VALUE_DTYPES
+    for backend in ("cpu", "gpu"):
+        got = allowed_value_dtypes(backend)
+        assert "float8_e4m3fn" not in got
+        assert "float32" in got and "int8" in got
+
+
+def test_roofline_credits_quantised_value_stream():
+    """Same schedule, narrower values: the roofline charges the int8
+    variant strictly fewer HBM bytes than its f32 twin (smaller value
+    stream + one f32 scale row) for both Pallas paths, and on a
+    weight-bound geometry — a big bank over a tiny feature map — the time
+    bound drops too."""
+    from repro.tuning.measure import candidate_cost
+
+    g = _geom(m=256, c=256, h=28, w=28, sparsity=0.9)
+    pallas = Candidate("pallas", tm=8, pad_to=8)
+    bsr = Candidate("bsr", block_m=8, block_n=128)
+    for cand in (pallas, bsr):
+        q = dataclasses.replace(cand, value_dtype="int8")
+        assert (candidate_cost(g, q)["hbm_bytes"]
+                < candidate_cost(g, cand)["hbm_bytes"])
+    g_wb = _geom(m=512, c=512, h=7, w=7, sparsity=0.95, batch=1)
+    for cand in (pallas, bsr):
+        q = dataclasses.replace(cand, value_dtype="int8")
+        assert roofline_estimate(g_wb, q) < roofline_estimate(g_wb, cand)
+
+
+def test_plan_layer_quantize_opt_in():
+    """plan_layer never pins a narrow dtype unless asked; with
+    quantize=True the roofline prefers the smaller value stream on a
+    memory-bound layer, and an off-TPU backend can never pin fp8."""
+    from repro.tuning import plan_layer
+
+    g = _geom(m=256, c=256, h=28, w=28, sparsity=0.9)
+    assert plan_layer(g, mode="roofline").value_dtype == "float32"
+    pe = plan_layer(g, mode="roofline", quantize=True)
+    assert pe.method in ("pallas", "bsr")
+    assert pe.value_dtype == "int8"   # cpu backend: fp8 filtered out
+    pe_tpu = plan_layer(g, mode="roofline", backend="tpu", quantize=True)
+    assert pe_tpu.value_dtype in ("int8", "float8_e4m3fn")
+
+
+def test_plan_entry_value_dtype_roundtrip():
+    """value_dtype survives the cache dict round-trip, and absent keys
+    (v1-v5 documents) default to the f32 value stream."""
+    pe = PlanEntry(method="bsr", te=16, tf=16, block_m=8, block_n=128,
+                   value_dtype="int8", est_s=1e-5, source="roofline")
+    d = pe.to_dict()
+    assert d["value_dtype"] == "int8"
+    assert PlanEntry.from_dict(d) == pe
+    legacy = {k: v for k, v in d.items() if k != "value_dtype"}
+    assert PlanEntry.from_dict(legacy).value_dtype == "float32"
