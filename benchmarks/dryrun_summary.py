@@ -70,11 +70,13 @@ def smoke() -> None:
     _smoke_cache_migrations()
     _smoke_traced_forward()
     _smoke_quantised_forward()
+    _smoke_chaos_forward()
     _smoke_static_verifier()
     print(f"benchmark smoke ok: {len(names)} fig11 rows, all suites import, "
           "bench json pipeline + bsr + quantised rows + zero fallbacks, "
           "cache v1-v5 -> v6 migrations, traced + int8-pinned forwards "
-          "valid, static verifier clean")
+          "valid, chaos serving zero-lost + degradation recorded, "
+          "static verifier clean")
 
 
 def _smoke_bench_json(bench_sparse_conv) -> None:
@@ -271,6 +273,61 @@ def _smoke_quantised_forward() -> None:
     if not np.isfinite(rel) or rel > 0.05:
         raise SystemExit(
             f"quantised smoke: int8 forward diverges from f32 (rel={rel})")
+
+
+def _smoke_chaos_forward() -> None:
+    """The fault-tolerant CNN serving tier must complete a seeded chaos
+    trace with zero lost/duplicated requests and recorded degradation
+    evidence, and a corrupted plan-cache file must degrade resiliently
+    (``PlanCacheWarning``), never crash the server build."""
+    import tempfile
+    import warnings
+
+    import numpy as np
+
+    from repro.engine import init_conv_params, lower
+    from repro.serving import (BucketSpec, ChaosConfig, ChaosInjector,
+                               RobustCnnServer, VirtualClock, arrival_trace,
+                               corrupt_plan_cache_file, slice_net)
+    from repro.tuning import PlanCache, plan_program
+    from repro.tuning.cache import PlanCacheWarning
+
+    net = slice_net("alexnet")
+    program = lower(net, (3, 12, 12))
+    params = init_conv_params(program, np.random.default_rng(0))
+    with tempfile.TemporaryDirectory() as td:
+        # Plan-cache corruption seam: persist a tuned cache, mangle it on
+        # disk, and build the server against the corrupted file.
+        cache_path = str(pathlib.Path(td) / "plans.json")
+        cache = PlanCache(cache_path)
+        plan_program(program, batch=2, mode="roofline", cache=cache,
+                     params=params)
+        corrupt_plan_cache_file(cache_path, mode="garbage")
+        chaos = ChaosInjector(ChaosConfig(
+            seed=0, step_fault_rate=0.4, plan_corruption_rate=1.0,
+            straggler_rate=0.1))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            server = RobustCnnServer(
+                net, params, [BucketSpec(3, 12, 12, batch=2)],
+                plan_cache=cache_path, clock=VirtualClock(), queue_depth=16,
+                max_attempts=6, chaos=chaos)
+        if not any(issubclass(w.category, PlanCacheWarning) for w in caught):
+            raise SystemExit(
+                "chaos smoke: corrupted plan cache loaded without a "
+                "PlanCacheWarning")
+    trace = arrival_trace(20, [(3, 12, 12)], seed=1, mean_gap_s=0.0005,
+                          deadline_s=(1.0, 2.0))
+    rep = server.run_trace(trace)
+    if rep.lost or rep.duplicated:
+        raise SystemExit(
+            f"chaos smoke: {rep.lost} lost / {rep.duplicated} duplicated "
+            f"request(s) under injected faults")
+    if not (rep.degradations or rep.dropped_rungs):
+        raise SystemExit(
+            "chaos smoke: chaos run recorded no degradation event")
+    if not chaos.corrupted_entries:
+        raise SystemExit("chaos smoke: plan corruption seam never fired")
 
 
 def _smoke_static_verifier() -> None:

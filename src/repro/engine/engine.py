@@ -396,10 +396,21 @@ class CnnEngine:
         return vals[self.program.out]
 
     def __call__(self, x: jax.Array, method: str = "dense", *,
-                 fuse: Optional[bool] = None) -> jax.Array:
+                 fuse: Optional[bool] = None,
+                 plan_override: Optional[Dict[str, Any]] = None,
+                 rung: Optional[str] = None) -> jax.Array:
+        """Execute the bound program.
+
+        ``plan_override`` substitutes an alternate plan table for this call
+        without rebinding the engine — the degraded-plan resolution the
+        serving tier's ladder uses (``repro.serving.robust``): each rung is
+        its own persistent plan dict, so each (method, shape, rung plan)
+        still compiles exactly once.  ``rung`` is a label recorded on the
+        forward's :class:`ExecutionReport` naming the ladder rung executed.
+        """
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; one of {METHODS}")
-        plan = self.plan
+        plan = plan_override if plan_override is not None else self.plan
         if method == "auto" and plan is None:
             plan = self._auto_plan(int(x.shape[0]))
         key = (method, tuple(x.shape), str(x.dtype), fuse, id(plan))
@@ -413,16 +424,16 @@ class CnnEngine:
             # Dispatch-time observation: the report is built from the same
             # _plan_decision the trace uses, never from inside the jit.
             self._record_forward(tuple(x.shape), str(x.dtype), method, plan,
-                                 fuse, jit_hit)
+                                 fuse, jit_hit, rung=rung)
         return fn(x)
 
     # -- observability -----------------------------------------------------
 
     def _record_forward(self, shape, dtype: str, method: str, plan,
                         fuse_override: Optional[bool],
-                        jit_hit: bool) -> None:
+                        jit_hit: bool, rung: Optional[str] = None) -> None:
         report = self._build_report(shape, dtype, method, plan,
-                                    fuse_override, jit_hit)
+                                    fuse_override, jit_hit, rung=rung)
         self.last_report = report
         telemetry.counter("engine.forwards").inc()
         telemetry.counter(
@@ -434,11 +445,13 @@ class CnnEngine:
 
     def _build_report(self, shape, dtype: str, method: str, plan,
                       fuse_override: Optional[bool],
-                      jit_hit: Optional[bool]) -> ExecutionReport:
+                      jit_hit: Optional[bool],
+                      rung: Optional[str] = None) -> ExecutionReport:
         batch = int(shape[0])
         report = ExecutionReport(
             method=method, batch=batch, in_shape=tuple(shape), dtype=dtype,
-            jit_cache_hit=jit_hit, plan_bound=self.plan is not None)
+            jit_cache_hit=jit_hit, plan_bound=self.plan is not None,
+            rung=rung)
         for op in self.program.conv_ops:
             report.ops.append(self._op_report(op, method, plan,
                                               fuse_override, batch=batch,
@@ -512,25 +525,30 @@ class CnnEngine:
             sparsity=op.sparsity, value_dtype=vdtype, **cost)
 
     def execution_report(self, x, method: str = "auto", *,
-                         fuse: Optional[bool] = None) -> ExecutionReport:
+                         fuse: Optional[bool] = None,
+                         plan_override: Optional[Dict[str, Any]] = None,
+                         rung: Optional[str] = None) -> ExecutionReport:
         """The ExecutionReport a forward with these arguments would produce,
         built without executing anything.
 
         ``x`` is the input array or just its shape tuple — dispatch is
         static Python over shapes and plan entries, so the report needs
         neither data nor a compile.  ``jit_cache_hit`` reflects whether the
-        corresponding compiled function already exists.
+        corresponding compiled function already exists.  ``plan_override``
+        and ``rung`` mirror :meth:`__call__` — the serving ladder probes
+        each rung's dispatch health through this before routing traffic at
+        it.
         """
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; one of {METHODS}")
         shape = tuple(x.shape) if hasattr(x, "shape") else tuple(x)
         dtype = str(x.dtype) if hasattr(x, "dtype") else "float32"
-        plan = self.plan
+        plan = plan_override if plan_override is not None else self.plan
         if method == "auto" and plan is None:
             plan = self._auto_plan(int(shape[0]))
         key = (method, shape, dtype, fuse, id(plan))
         return self._build_report(shape, dtype, method, plan, fuse,
-                                  jit_hit=key in self._fns)
+                                  jit_hit=key in self._fns, rung=rung)
 
     def forward_timed(self, x: jax.Array, method: str = "auto", *,
                       fuse: Optional[bool] = None) -> jax.Array:

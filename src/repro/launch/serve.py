@@ -13,6 +13,15 @@ check on a reduced layer slice.
 
   PYTHONPATH=src python -m repro.launch.serve --smoke --autotune \
       [--cnn alexnet] [--plan-cache plans/autotune_cache.json]
+
+With --cnn-serve, the fault-tolerant bucketed CNN serving loop
+(repro.serving.robust) serves a seeded arrival trace on a reduced network
+slice and prints the SLO summary; --chaos adds seeded fault injection
+(repro.serving.chaos) and asserts zero lost requests plus recorded
+degradation evidence.
+
+  PYTHONPATH=src python -m repro.launch.serve --cnn-serve --chaos \
+      [--cnn googlenet] [--chaos-seed 0] [--requests 40]
 """
 from __future__ import annotations
 
@@ -142,6 +151,51 @@ def autotune_main(args) -> None:
             f"fallback(s): {[o.fallback_reason for o in report.fallback_ops]}")
 
 
+def cnn_serve_main(args) -> None:
+    """Robust CNN serving flow: shape-bucketed admission + degradation
+    ladder over a reduced network slice, driven by a seeded arrival trace
+    on a virtual clock (deterministic; interpret-mode Pallas stays
+    tractable on CPU).  ``--chaos`` turns on seeded fault injection — the
+    run must still terminate every request (zero lost) and must leave
+    degradation evidence (a ladder step-down or a dropped rung)."""
+    from repro.engine import init_conv_params, lower
+    from repro.serving import (BucketSpec, ChaosConfig, ChaosInjector,
+                               RobustCnnServer, VirtualClock, arrival_trace,
+                               slice_net)
+
+    name = args.cnn
+    net = slice_net(name)
+    rng = np.random.default_rng(args.seed)
+    params = init_conv_params(lower(net, (3, 12, 12)), rng)
+    chaos = None
+    if args.chaos:
+        chaos = ChaosInjector(ChaosConfig(
+            seed=args.chaos_seed, step_fault_rate=0.35,
+            plan_corruption_rate=0.5, straggler_rate=0.1))
+    server = RobustCnnServer(
+        net, params,
+        [BucketSpec(3, 12, 12, batch=2), BucketSpec(3, 16, 16, batch=2)],
+        clock=VirtualClock(), queue_depth=16, max_attempts=6,
+        cooldown_ticks=4, chaos=chaos)
+    trace = arrival_trace(
+        args.requests, [(3, 12, 12), (3, 10, 10), (3, 16, 16)],
+        seed=args.seed, mean_gap_s=0.0005, deadline_s=(1.0, 2.0))
+    ladder = {b.spec.key: [r.name for r in b.rungs] for b in server._buckets}
+    print(f"serving {name} slice: {args.requests} requests over "
+          f"{len(ladder)} buckets; ladders {ladder}"
+          + (f"; chaos seed {args.chaos_seed}" if chaos else ""))
+    rep = server.run_trace(trace)
+    print(rep.format())
+    rep.verify()  # zero lost, zero duplicated — or raise
+    if chaos is not None:
+        print("chaos:", chaos.summary())
+        assert rep.degradations or rep.dropped_rungs, (
+            "chaos run left no degradation evidence (no ladder step-down, "
+            "no dropped rung) — injection did not exercise the ladder")
+    print(f"slo ok: {rep.completed}/{rep.submitted} served, "
+          f"{rep.rejected_total} shed with reasons, 0 lost")
+
+
 def export_trace(path: str) -> None:
     """Validate + write the global tracer's Chrome-trace JSON and a metrics
     summary — what ``--trace out.json`` produces."""
@@ -170,6 +224,15 @@ def main() -> None:
     ap.add_argument("--trace", metavar="OUT_JSON",
                     help="enable telemetry and export a Chrome-trace JSON "
                          "(chrome://tracing / Perfetto) on exit")
+    ap.add_argument("--cnn-serve", action="store_true",
+                    help="run the fault-tolerant bucketed CNN serving loop "
+                         "(repro.serving.robust) on a reduced slice")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --cnn-serve: seeded fault injection "
+                         "(repro.serving.chaos)")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=40,
+                    help="with --cnn-serve: arrival-trace length")
     args = ap.parse_args()
 
     if args.trace:
@@ -177,6 +240,11 @@ def main() -> None:
 
     if args.autotune:
         autotune_main(args)
+        if args.trace:
+            export_trace(args.trace)
+        return
+    if args.cnn_serve:
+        cnn_serve_main(args)
         if args.trace:
             export_trace(args.trace)
         return

@@ -1,6 +1,6 @@
-from repro.runtime.fault_tolerance import (FailureDetector, StepRunner,
-                                           StragglerMonitor)
+from repro.runtime.fault_tolerance import (Backoff, FailureDetector,
+                                           StepRunner, StragglerMonitor)
 from repro.runtime.elastic import build_mesh, plan_remesh
 
-__all__ = ["FailureDetector", "StepRunner", "StragglerMonitor",
+__all__ = ["Backoff", "FailureDetector", "StepRunner", "StragglerMonitor",
            "build_mesh", "plan_remesh"]

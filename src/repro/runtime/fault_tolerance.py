@@ -12,6 +12,13 @@ inflates without failing.  The pieces here:
   StepRunner       -- the restart loop: run step, on retryable failure
       restore the latest committed checkpoint and continue; on repeated
       failure escalate to the caller (scheduler would then re-mesh).
+  Backoff          -- deterministic capped-exponential retry-delay policy
+      (no jitter: the serving chaos harness asserts exact schedules).
+
+``FailureDetector`` and ``StragglerMonitor`` are shared with the CNN
+serving tier (``repro.serving.robust``): the same retryable-vs-fatal
+classification that restarts a training step decides whether a serve-step
+failure re-enqueues its requests with backoff or rejects them.
 
 These are deliberately framework-level (pure Python around the jitted step):
 the jitted computation stays simple and the policy stays inspectable.
@@ -66,6 +73,28 @@ class StragglerMonitor:
         med = ts[len(ts) // 2]
         return [h for h, t in host_times.items()
                 if t > 1.5 * med and t - med > 1.0]
+
+
+class Backoff:
+    """Capped exponential retry delay: ``base * mult**attempt``, <= ``cap``.
+
+    Deliberately jitter-free — retry schedules must be reproducible under
+    the seeded fault-injection harness (``repro.serving.chaos``), and the
+    serving tier spreads retries by request identity, not randomness.
+    """
+
+    def __init__(self, base_s: float = 0.05, mult: float = 2.0,
+                 cap_s: float = 2.0):
+        if base_s <= 0 or mult < 1.0:
+            raise ValueError(f"bad backoff policy base={base_s} mult={mult}")
+        self.base_s = base_s
+        self.mult = mult
+        self.cap_s = cap_s
+
+    def delay_s(self, attempt: int) -> float:
+        """Delay before retry number ``attempt`` (0-based: the first retry
+        waits ``base_s``)."""
+        return min(self.cap_s, self.base_s * self.mult ** max(attempt, 0))
 
 
 class FailureDetector:

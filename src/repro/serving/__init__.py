@@ -1,3 +1,21 @@
-from repro.serving.scheduler import (Request, ContinuousBatcher, ServeEngine)
+from repro.serving.chaos import (Arrival, ChaosConfig, ChaosFatalError,
+                                 ChaosInjector, ChaosRetryableError,
+                                 arrival_trace, corrupt_plan_cache_file,
+                                 slice_net)
+from repro.serving.robust import (LADDER_REASONS, REJECT_REASONS, BucketSpec,
+                                  InferenceRequest, LadderEvent,
+                                  RobustCnnServer, SloReport, VirtualClock,
+                                  WallClock)
+from repro.serving.scheduler import (ContinuousBatcher, DrainExhaustedWarning,
+                                     DrainResult, Request, ServeEngine,
+                                     StragglerTickWarning)
 
-__all__ = ["Request", "ContinuousBatcher", "ServeEngine"]
+__all__ = [
+    "Arrival", "BucketSpec", "ChaosConfig", "ChaosFatalError",
+    "ChaosInjector", "ChaosRetryableError", "ContinuousBatcher",
+    "DrainExhaustedWarning", "DrainResult", "InferenceRequest",
+    "LADDER_REASONS", "LadderEvent", "REJECT_REASONS", "Request",
+    "RobustCnnServer", "ServeEngine", "SloReport", "StragglerTickWarning",
+    "VirtualClock", "WallClock", "arrival_trace", "corrupt_plan_cache_file",
+    "slice_net",
+]

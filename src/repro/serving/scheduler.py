@@ -23,12 +23,42 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+
+class DrainExhaustedWarning(UserWarning):
+    """``run_until_drained`` hit ``max_ticks`` with requests still pending."""
+
+
+class StragglerTickWarning(UserWarning):
+    """A serving tick straggled (k-sigma above the EWMA tick time)."""
+
+
+class DrainResult(List["Request"]):
+    """``run_until_drained``'s return value: the finished-request list
+    (drop-in for existing callers) plus the drain status.
+
+    ``drained`` is False when the tick budget ran out with requests still
+    queued or active — previously a *silently incomplete* return; callers
+    that must not lose requests check it (or count
+    ``serving.drain_exhausted``).
+    """
+
+    drained: bool = True
+    ticks: int = 0
+    pending_queued: int = 0
+    pending_active: int = 0
+
+    @property
+    def pending(self) -> int:
+        return self.pending_queued + self.pending_active
 
 
 @dataclasses.dataclass
@@ -130,7 +160,8 @@ class ServeEngine:
     """
 
     def __init__(self, serve_step: Callable, params, cache, n_slots: int,
-                 max_len: int, pad_id: int = 0):
+                 max_len: int, pad_id: int = 0,
+                 monitor: Optional[StragglerMonitor] = None):
         self.step = serve_step
         self.params = params
         self.cache = cache
@@ -143,6 +174,13 @@ class ServeEngine:
         # only when the batch fully drains.  Taking max(slot.pos) instead
         # would regress when the deepest slot retires and overwrite live KV.
         self._cursor = 0
+        # Soft-failure detection: working-tick wall times feed an EWMA
+        # monitor; a k-sigma outlier tick is a straggler (host contention,
+        # background compile, a slow collective) — counted, and warned
+        # about once so a degrading serving host leaves a signal even with
+        # telemetry off.
+        self.monitor = monitor or StragglerMonitor()
+        self._straggler_warned = False
 
     def submit(self, req: Request) -> None:
         self.batcher.submit(req)
@@ -161,7 +199,7 @@ class ServeEngine:
 
     def tick(self) -> None:
         telem = telemetry.is_enabled()
-        t0 = time.perf_counter() if telem else 0.0
+        t0 = time.perf_counter()
         self.batcher.admit(budget=self.max_len - self._cursor)
         if telem:
             # Levels are recorded even for idle ticks (before the early
@@ -197,17 +235,32 @@ class ServeEngine:
         if self.batcher.active == 0:
             self._cursor = 0  # batch drained: next wave reuses the cache
         self._tick += 1
+        # Straggler accounting covers working ticks only — idle ticks
+        # return above and would drown both the EWMA and the latency
+        # distribution in no-op times.
+        dt = time.perf_counter() - t0
+        if self.monitor.observe(dt):
+            if telem:
+                telemetry.counter("serving.straggler_ticks").inc()
+            if not self._straggler_warned:
+                self._straggler_warned = True
+                warnings.warn(
+                    f"ServeEngine: tick {self._tick - 1} took {dt * 1e3:.1f} "
+                    f"ms against an EWMA of {self.monitor.mean * 1e3:.1f} ms "
+                    f"— straggling (further stragglers are counted under "
+                    f"serving.straggler_ticks, not warned)",
+                    StragglerTickWarning, stacklevel=2)
         if telem:
-            # Latency of working ticks only — idle ticks return above and
-            # would drown the distribution in no-op times.
-            telemetry.histogram("serving.tick_latency_s").observe(
-                time.perf_counter() - t0)
+            telemetry.gauge("serving.tick_ewma_s").set(self.monitor.mean)
+            telemetry.histogram("serving.tick_latency_s").observe(dt)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
+    def run_until_drained(self, max_ticks: int = 10_000) -> DrainResult:
+        finished: DrainResult = DrainResult()
+        ticks = 0
         for _ in range(max_ticks):
             before = [s.request for s in self.batcher.slots]
             self.tick()
+            ticks += 1
             finished.extend(r for r in before
                             if r is not None and r.done and r not in finished)
             if not self.batcher.queue and self.batcher.active == 0:
@@ -220,4 +273,21 @@ class ServeEngine:
         finished.extend(r for r in self.batcher.queue if r.done)
         finished.extend(r for r in self.batcher.rejected if r not in finished)
         self.batcher.rejected.clear()
+        finished.ticks = ticks
+        finished.pending_queued = sum(1 for r in self.batcher.queue
+                                      if not r.done)
+        finished.pending_active = self.batcher.active
+        finished.drained = finished.pending == 0
+        if not finished.drained:
+            # Hitting the tick budget with live requests used to return
+            # silently incomplete — surface it: the caller sees the status,
+            # telemetry counts it, and a warning names the shortfall.
+            if telemetry.is_enabled():
+                telemetry.counter("serving.drain_exhausted").inc()
+            warnings.warn(
+                f"run_until_drained: tick budget {max_ticks} exhausted with "
+                f"{finished.pending_queued} request(s) still queued and "
+                f"{finished.pending_active} still active — returned list is "
+                f"incomplete (result.drained is False)",
+                DrainExhaustedWarning, stacklevel=2)
         return finished

@@ -30,6 +30,11 @@ Per :class:`OpReport` fields:
       measured wall seconds, filled only by the engine's opt-in timed mode
       (``CnnEngine.forward_timed`` — per-op ``block_until_ready``
       boundaries)
+
+The report-level ``rung`` field names the degradation-ladder rung the
+serving tier executed this forward at (``tuned`` / ``quantised`` /
+``dense`` — see ``repro.serving.robust``); ``None`` for forwards outside
+the ladder (direct engine calls).
 """
 from __future__ import annotations
 
@@ -79,6 +84,7 @@ class ExecutionReport:
     jit_cache_hit: Optional[bool] = None
     plan_bound: bool = False             # engine had a bound (vs auto) plan
     timed: bool = False
+    rung: Optional[str] = None           # degradation-ladder rung executed
 
     @property
     def fallback_ops(self) -> List[OpReport]:
@@ -105,6 +111,7 @@ class ExecutionReport:
             "in_shape": list(self.in_shape), "dtype": self.dtype,
             "jit_cache_hit": self.jit_cache_hit,
             "plan_bound": self.plan_bound, "timed": self.timed,
+            "rung": self.rung,
             "fallback_count": self.fallback_count,
             "methods_executed": self.methods_executed,
             "ops": [o.to_dict() for o in self.ops],
@@ -115,7 +122,8 @@ class ExecutionReport:
         lines = [
             f"ExecutionReport method={self.method} batch={self.batch} "
             f"jit={'hit' if self.jit_cache_hit else 'miss'} "
-            f"fallbacks={self.fallback_count}",
+            f"fallbacks={self.fallback_count}"
+            + (f" rung={self.rung}" if self.rung is not None else ""),
             f"{'layer':<22} {'planned':<11} {'executed':<11} "
             f"{'provenance':<13} {'fallback':<20} {'est_us':>9} "
             f"{'stall_us':>9} {'wall_us':>9}",

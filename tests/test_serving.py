@@ -1,12 +1,16 @@
 """Continuous-batching serving engine tests."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.launch.steps import make_serve_step
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.serving import ContinuousBatcher, Request, ServeEngine
+from repro.serving import (ContinuousBatcher, DrainExhaustedWarning, Request,
+                           ServeEngine, StragglerTickWarning)
 
 CFG = ModelConfig(name="srv", family="dense", n_layers=2, d_model=64,
                   vocab=128, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
@@ -161,6 +165,62 @@ def test_serving_telemetry_metrics():
         assert hist.count > 0
         assert 0 < hist.min <= hist.p50 <= hist.p95 <= hist.p99 <= hist.max
     telemetry.reset()
+
+
+def test_straggler_tick_flagged_counted_and_warned_once():
+    """A k-sigma outlier tick trips the wired StragglerMonitor: the
+    ``serving.straggler_ticks`` counter increments, the EWMA gauge is
+    recorded, and exactly one warning names the slow tick."""
+    from repro import telemetry
+
+    state = {"n": 0}
+
+    def slow_step(p, t, c, l):
+        # Pure-python step: stable microsecond ticks (no jit compile noise
+        # in the EWMA), with two deliberate outliers.
+        state["n"] += 1
+        if state["n"] in (10, 12):  # two stragglers, one warning
+            time.sleep(0.05)
+        return np.asarray(t)[:, 0] + 1, c
+
+    eng = ServeEngine(slow_step, params=None, cache=None, n_slots=2,
+                      max_len=64)
+    eng.submit(Request(0, [1, 2, 3], max_new_tokens=16))
+    telemetry.reset()
+    with telemetry.enabled():
+        with pytest.warns(StragglerTickWarning) as caught:
+            eng.run_until_drained()
+        snap = telemetry.snapshot()
+    telemetry.reset()
+    assert len(caught) == 1  # warned once, further stragglers only counted
+    assert snap["serving.straggler_ticks"]["value"] >= 1
+    assert snap["serving.tick_ewma_s"]["value"] > 0
+    assert eng.monitor.flags  # the monitor recorded the outlier itself
+
+
+def test_run_until_drained_reports_exhaustion():
+    """Regression: hitting ``max_ticks`` with requests still pending used
+    to return a silently incomplete list — now the DrainResult carries the
+    drain status, telemetry counts it, and a warning fires."""
+    from repro import telemetry
+
+    eng = _engine(n_slots=1, max_len=64)
+    reqs = [Request(i, [1, 2, 3], max_new_tokens=8) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    telemetry.reset()
+    with telemetry.enabled():
+        with pytest.warns(DrainExhaustedWarning):
+            out = eng.run_until_drained(max_ticks=2)
+        snap = telemetry.snapshot()
+    telemetry.reset()
+    assert out.drained is False and out.ticks == 2
+    assert out.pending == out.pending_queued + out.pending_active > 0
+    assert snap["serving.drain_exhausted"]["value"] == 1
+    # a completed drain reports clean status on the same engine
+    done = eng.run_until_drained()
+    assert done.drained is True and done.pending == 0
+    assert all(r.done for r in reqs)
 
 
 def test_sparsify_params_converts_list_and_root_leaves():
